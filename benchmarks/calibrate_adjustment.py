@@ -1,0 +1,59 @@
+"""Calibrate the flash-adjustment access constant empirically.
+
+``vmem_resident_traffic`` subtracts the attention logits/probs traffic the
+Pallas kernels keep in VMEM. The subtraction needs the number of HBM
+accesses XLA's lowering actually performs per (q, k) pair — assumed 16 B
+per pair-access-set so far. This tool lowers a standalone reference
+attention at several sizes, fits  bytes = a + c * pairs,  and reports c
+(bytes per causal pair), for both forward-only and forward+backward.
+
+  PYTHONPATH=src python -m benchmarks.calibrate_adjustment
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def measure(train: bool = False):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+
+    def fwd(q, k, v):
+        return ref.flash_attention_ref(q, k, v, causal=True)
+
+    def loss(q, k, v):
+        return jnp.sum(fwd(q, k, v).astype(jnp.float32) ** 2)
+
+    rows = []
+    B, H, hd = 2, 4, 64
+    for S in (256, 512, 1024, 2048):
+        q = jax.ShapeDtypeStruct((B, S, H, hd), jnp.bfloat16)
+        k = jax.ShapeDtypeStruct((B, S, H, hd), jnp.bfloat16)
+        v = jax.ShapeDtypeStruct((B, S, H, hd), jnp.bfloat16)
+        fn = jax.grad(loss, argnums=(0, 1, 2)) if train else fwd
+        compiled = jax.jit(fn).lower(q, k, v).compile()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        pairs = B * H * S * S / 2
+        rows.append((pairs, float(ca["bytes accessed"])))
+    # least-squares fit bytes = a + c * pairs
+    x = np.array([r[0] for r in rows])
+    y = np.array([r[1] for r in rows])
+    c, a = np.polyfit(x, y, 1)
+    return c, a, rows
+
+
+def main():
+    c_fwd, _, rows_f = measure(train=False)
+    c_bwd, _, rows_b = measure(train=True)
+    print("forward-only  bytes/pair:", round(c_fwd, 2))
+    print("fwd+backward  bytes/pair:", round(c_bwd, 2))
+    print("(current vmem_resident_traffic assumes 16 fwd / 48 train)")
+    print("train_scale implied:", round(c_bwd / max(c_fwd, 1e-9), 2))
+    return c_fwd, c_bwd
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Shared benchmark machinery: the paper's workload and setup sweep.
+
+Experiment 1 (Figs 1-4): input 16,384 / output 256, batch swept 2..64,
+request rate infinite, five setups. One sweep is shared by all figures
+(module-level cache) so ``python -m benchmarks.run`` does each simulation
+once.
+"""
+from __future__ import annotations
+
+import csv
+import os
+from typing import Dict, Iterable, List, Tuple
+
+from repro.configs import get_config
+from repro.core import Cluster, SETUPS, SetupResult, random_workload
+
+ARCH = os.environ.get("REPRO_BENCH_ARCH", "llama32-3b")
+BATCHES = (2, 4, 8, 16, 32, 48, 64)
+INPUT_LEN = 16_384
+OUTPUT_LEN = 256
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+_CACHE: Dict[Tuple[str, str, int], SetupResult] = {}
+
+
+def run_point(setup: str, batch: int, arch: str = ARCH,
+              **kw) -> SetupResult:
+    key = (arch, setup, batch)
+    if key not in _CACHE and not kw:
+        cfg = get_config(arch)
+        reqs = random_workload(batch, input_len=INPUT_LEN,
+                               output_len=OUTPUT_LEN)
+        _CACHE[key] = Cluster(setup, cfg).run(reqs)
+    if kw:
+        cfg = get_config(arch)
+        reqs = random_workload(batch, input_len=INPUT_LEN,
+                               output_len=OUTPUT_LEN)
+        return Cluster(setup, cfg, **kw).run(reqs)
+    return _CACHE[key]
+
+
+def full_sweep(arch: str = ARCH,
+               batches: Iterable[int] = BATCHES
+               ) -> Dict[Tuple[str, int], SetupResult]:
+    return {(s, b): run_point(s, b, arch) for s in SETUPS for b in batches}
+
+
+def write_csv(name: str, header: List[str], rows: List[List]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def print_table(title: str, header: List[str], rows: List[List]) -> None:
+    print(f"\n== {title}")
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))

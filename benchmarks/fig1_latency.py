@@ -1,0 +1,27 @@
+"""Paper Fig 1: TTFT and TPOT vs batch size across the five setups."""
+from __future__ import annotations
+
+from repro.core import SETUPS
+from . import common
+
+
+def run(arch: str = common.ARCH):
+    header = ["setup", "batch", "median_ttft_s", "p99_ttft_s",
+              "median_tpot_ms", "p99_tpot_ms", "evictions",
+              "recomputed_tokens"]
+    rows = []
+    for setup in SETUPS:
+        for bs in common.BATCHES:
+            m = common.run_point(setup, bs, arch).metrics
+            rows.append([setup, bs, round(m.median_ttft_s, 4),
+                         round(m.p99_ttft_s, 4),
+                         round(m.median_tpot_s * 1e3, 3),
+                         round(m.p99_tpot_s * 1e3, 3),
+                         m.total_evictions, m.total_recomputed_tokens])
+    common.print_table("Fig 1: latency vs batch size", header, rows)
+    common.write_csv("fig1_latency.csv", header, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Paper Fig 2: prefill and decode throughput vs batch size."""
+from __future__ import annotations
+
+from repro.core import SETUPS
+from . import common
+
+
+def run(arch: str = common.ARCH):
+    header = ["setup", "batch", "prefill_tput_tok_s", "decode_tput_tok_s",
+              "makespan_s"]
+    rows = []
+    for setup in SETUPS:
+        for bs in common.BATCHES:
+            m = common.run_point(setup, bs, arch).metrics
+            rows.append([setup, bs,
+                         round(m.prefill_throughput_tok_s, 1),
+                         round(m.decode_throughput_tok_s, 1),
+                         round(m.makespan_s, 2)])
+    common.print_table("Fig 2: throughput vs batch size", header, rows)
+    common.write_csv("fig2_throughput.csv", header, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

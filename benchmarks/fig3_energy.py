@@ -1,0 +1,22 @@
+"""Paper Fig 3: total energy (J/token) vs batch size."""
+from __future__ import annotations
+
+from repro.core import SETUPS
+from . import common
+
+
+def run(arch: str = common.ARCH):
+    header = ["setup", "batch", "total_energy_kj", "joules_per_token"]
+    rows = []
+    for setup in SETUPS:
+        for bs in common.BATCHES:
+            res = common.run_point(setup, bs, arch)
+            rows.append([setup, bs, round(res.energy.total_j / 1e3, 3),
+                         round(res.joules_per_token, 5)])
+    common.print_table("Fig 3: energy vs batch size", header, rows)
+    common.write_csv("fig3_energy.csv", header, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

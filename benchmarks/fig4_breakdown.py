@@ -1,0 +1,26 @@
+"""Paper Fig 4: per-component energy breakdown (accelerators / CPU / DRAM
+/ disk / interconnect) per setup and batch size."""
+from __future__ import annotations
+
+from repro.core import SETUPS
+from . import common
+
+COMPONENTS = ("acc0", "acc1", "cpu", "dram", "disk", "pcie", "ici")
+
+
+def run(arch: str = common.ARCH, batches=(4, 16, 64)):
+    header = ["setup", "batch"] + [f"{c}_kj" for c in COMPONENTS]
+    rows = []
+    for setup in SETUPS:
+        for bs in batches:
+            res = common.run_point(setup, bs, arch)
+            bd = res.energy.breakdown()
+            rows.append([setup, bs] + [round(bd.get(c, 0.0) / 1e3, 3)
+                                       for c in COMPONENTS])
+    common.print_table("Fig 4: component energy breakdown", header, rows)
+    common.write_csv("fig4_breakdown.csv", header, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Paper Fig 5: TTFT-energy and TPOT-energy Pareto frontiers over the DVFS
+grid (batch 16, input 16,384, output 256), plus the stage-wise independent
+(phi_p, phi_d) search for the disaggregated setups."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import SETUPS, random_workload
+from repro.core.costs import DEFAULT_FREQ_GRID
+from repro.core.dvfs import (best_independent, best_total_energy,
+                             sweep_frequencies, sweep_independent)
+from . import common
+
+GRID = DEFAULT_FREQ_GRID[::2] + (1.0,)    # 6-point grid keeps runtime sane
+
+
+def _wl():
+    return random_workload(16, input_len=common.INPUT_LEN,
+                           output_len=common.OUTPUT_LEN)
+
+
+def run(arch: str = common.ARCH):
+    cfg = get_config(arch)
+    header = ["setup", "phi", "median_ttft_s", "prefill_energy_kj",
+              "median_tpot_ms", "decode_energy_kj"]
+    rows = []
+    sweeps = {}
+    for setup in SETUPS:
+        sw = sweep_frequencies(setup, cfg, _wl, freq_grid=GRID)
+        sweeps[setup] = sw
+        for pp, dp in zip(sw.prefill_points, sw.decode_points):
+            rows.append([setup, pp.phi, round(pp.latency_s, 4),
+                         round(pp.energy_j / 1e3, 3),
+                         round(dp.latency_s * 1e3, 3),
+                         round(dp.energy_j / 1e3, 3)])
+    common.print_table("Fig 5: latency-energy Pareto points", header, rows)
+    common.write_csv("fig5_pareto.csv", header, rows)
+
+    # stage-wise independent frequency search (disaggregation's edge)
+    header2 = ["setup", "phi_prefill", "phi_decode", "ttft_s", "tpot_ms",
+               "stage_energy_kj"]
+    rows2 = []
+    for setup in SETUPS:
+        if setup.startswith("co"):
+            best = best_total_energy(sweeps[setup])
+        else:
+            recs = sweep_independent(setup, cfg, _wl,
+                                     freq_grid=GRID[::2] + (1.0,))
+            b = best_independent(recs)
+            best = {"phi_prefill": b["phi_prefill"],
+                    "phi_decode": b["phi_decode"],
+                    "ttft_s": b["ttft_s"], "tpot_s": b["tpot_s"],
+                    "energy_j": b["energy_j"]}
+        rows2.append([setup, best["phi_prefill"], best["phi_decode"],
+                      round(best["ttft_s"], 4),
+                      round(best["tpot_s"] * 1e3, 3),
+                      round(best["energy_j"] / 1e3, 3)])
+    common.print_table("Fig 5b: best (independent) frequency choices",
+                       header2, rows2)
+    common.write_csv("fig5_best_freq.csv", header2, rows2)
+    return rows, rows2
+
+
+if __name__ == "__main__":
+    run()

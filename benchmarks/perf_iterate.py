@@ -1,0 +1,86 @@
+"""Perf-iteration harness: hypothesis -> change -> re-lower -> compare.
+
+Runs one (arch, shape) cell at the baseline and under a set of named
+optimization flags (repro.dist.opt_flags), printing the roofline terms
+side by side. Each invocation is one row of the EXPERIMENTS.md section
+Perf log.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterate \
+      --arch qwen3-1.7b --shape decode_32k --opt seq_shard_kv
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, Optional
+
+
+def run_cell(arch: str, shape: str, opt: str = "",
+             multi_pod: bool = False) -> Dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    if opt:
+        env["REPRO_OPT"] = opt
+    else:
+        env.pop("REPRO_OPT", None)
+    code = (
+        "import json\n"
+        "from repro.launch.dryrun import run_cell\n"
+        f"rec = run_cell({arch!r}, {shape!r}, {multi_pod}, verbose=False)\n"
+        "rec.pop('traceback', None)\n"
+        "print('REC:' + json.dumps(rec))\n")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=3600)
+    if proc.returncode != 0:
+        return {"status": "fail", "error": proc.stderr[-1500:]}
+    line = [l for l in proc.stdout.splitlines() if l.startswith("REC:")][0]
+    return json.loads(line[4:])
+
+
+def _fmt(rec: Dict) -> str:
+    if rec.get("status") != "ok":
+        return f"FAIL: {rec.get('error', '?')[:200]}"
+    r = rec["roofline"]
+    return (f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+            f"collective={r['collective_s']:.4f}s dom={r['dominant']} "
+            f"useful={r['useful_flops_ratio']:.3f} "
+            f"step={r['step_time_s']:.4f}s")
+
+
+def compare(arch: str, shape: str, opt: str,
+            baseline: Optional[Dict] = None) -> Dict:
+    base = baseline or run_cell(arch, shape)
+    tuned = run_cell(arch, shape, opt)
+    print(f"cell: {arch} x {shape}")
+    print(f"  baseline        : {_fmt(base)}")
+    print(f"  +{opt:15s}: {_fmt(tuned)}")
+    if base.get("status") == "ok" and tuned.get("status") == "ok":
+        b, t = base["roofline"], tuned["roofline"]
+        for term in ("compute_s", "memory_s", "collective_s",
+                     "step_time_s"):
+            if b[term] > 0:
+                print(f"  {term:13s}: {b[term]:.4f} -> {t[term]:.4f}  "
+                      f"({(1 - t[term] / b[term]) * 100:+.1f}% reduction)")
+    return {"baseline": base, "tuned": tuned}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--opt", required=True,
+                    help="comma-separated flag set to test")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    res = compare(args.arch, args.shape, args.opt)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

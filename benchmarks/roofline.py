@@ -1,0 +1,125 @@
+"""Roofline analysis (deliverable g): per (arch x shape) on the single-pod
+mesh — the three terms, dominant bottleneck, MODEL_FLOPS ratio, and a
+what-would-move-it note.
+
+The numbers come from the dry-run's compiled artifacts; running compiles
+in-process is impossible here (512 forced devices), so this module either
+reads a ``dryrun_results.json`` produced by ``repro.launch.dryrun`` or
+shells out per cell.
+
+  PYTHONPATH=src python -m benchmarks.roofline --from-json dryrun.json
+  PYTHONPATH=src python -m benchmarks.roofline --cells qwen3-1.7b:train_4k
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional
+
+from repro.configs import ALL_SHAPES, ASSIGNED_ARCHS
+from . import common
+
+DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                            "dryrun_results.json")
+
+_ADVICE = {
+    "compute": ("compute-bound: raise MXU efficiency — larger fused matmul"
+                " tiles, fewer f32 upcasts, remat policy that skips"
+                " recomputing matmuls (dot-checkpointing)"),
+    "memory": ("memory-bound: keep attention logits / scan state in VMEM"
+               " (Pallas kernels), fuse norms into neighbors, cut f32"
+               " intermediates, avoid involuntary SPMD remat copies"),
+    "collective": ("collective-bound: reshard to cut all-gathers (batch-"
+                   "parallel decode state), overlap DP all-reduce with"
+                   " backward, int8-compress gradients, bucket small"
+                   " collectives"),
+}
+
+
+def run_cell_subprocess(arch: str, shape: str, multi_pod: bool = False
+                        ) -> Dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    code = (
+        "import json\n"
+        "from repro.launch.dryrun import run_cell\n"
+        f"rec = run_cell({arch!r}, {shape!r}, {multi_pod}, verbose=False)\n"
+        "rec.pop('traceback', None)\n"
+        "print('REC:' + json.dumps(rec))\n")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=3600)
+    if proc.returncode != 0:
+        return {"arch": arch, "shape": shape, "status": "fail",
+                "error": proc.stderr[-500:]}
+    line = [l for l in proc.stdout.splitlines() if l.startswith("REC:")][0]
+    return json.loads(line[4:])
+
+
+def table_from_records(records: List[Dict]) -> List[List]:
+    rows = []
+    for rec in records:
+        if rec.get("mesh") not in (None, "16x16"):
+            continue
+        if rec["status"] == "skip":
+            rows.append([rec["arch"], rec["shape"], "skip", "-", "-", "-",
+                         "-", "-", rec.get("reason", "")[:50]])
+            continue
+        if rec["status"] != "ok" or "roofline" not in rec:
+            rows.append([rec["arch"], rec["shape"], rec["status"], "-",
+                         "-", "-", "-", "-", rec.get("error", "")[:50]])
+            continue
+        r = rec["roofline"]
+        rows.append([
+            rec["arch"], rec["shape"], "ok",
+            f"{r['compute_s']:.4f}", f"{r['memory_s']:.4f}",
+            f"{r['collective_s']:.4f}", r["dominant"],
+            f"{r['useful_flops_ratio']:.3f}",
+            _ADVICE[r["dominant"]][:60],
+        ])
+    return rows
+
+
+HEADER = ["arch", "shape", "status", "compute_s", "memory_s",
+          "collective_s", "dominant", "useful_ratio", "next_lever"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--from-json", default=None)
+    ap.add_argument("--cells", nargs="*", default=None,
+                    help="arch:shape pairs to (re)compile")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    records: List[Dict] = []
+    src = args.from_json or (DEFAULT_JSON if os.path.exists(DEFAULT_JSON)
+                             else None)
+    if src and not args.cells:
+        with open(src) as f:
+            records = json.load(f)
+    elif args.cells:
+        for cell in args.cells:
+            arch, shape = cell.split(":")
+            records.append(run_cell_subprocess(arch, shape))
+    else:
+        print("no dryrun_results.json found; compiling one demo cell "
+              "(use launch.dryrun --all --out dryrun_results.json for the "
+              "full 40-cell table)")
+        records.append(run_cell_subprocess("qwen2-0.5b", "decode_32k"))
+
+    rows = table_from_records(records)
+    common.print_table("Roofline (single-pod 16x16, per-device terms)",
+                       HEADER, rows)
+    common.write_csv("roofline.csv", HEADER, rows)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

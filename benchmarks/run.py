@@ -1,0 +1,49 @@
+"""Benchmark driver: one harness per paper table/figure + claim validation
++ the roofline table (from dryrun_results.json when present).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --quick    # reduced batch grid
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (common, fig1_latency, fig2_throughput, fig3_energy,
+               fig4_breakdown, fig5_pareto, reuse_bench, roofline,
+               validate_claims)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller batch grid (CI mode)")
+    ap.add_argument("--arch", default=common.ARCH)
+    ap.add_argument("--skip-pareto", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        common.BATCHES = (2, 8, 16, 32)
+
+    t0 = time.time()
+    print(f"== benchmarks.run arch={args.arch} batches={common.BATCHES}")
+    fig1_latency.run(args.arch)
+    fig2_throughput.run(args.arch)
+    fig3_energy.run(args.arch)
+    fig4_breakdown.run(args.arch)
+    if not args.skip_pareto:
+        fig5_pareto.run(args.arch)
+    reuse_bench.run()
+    failures = validate_claims.run()
+    try:
+        roofline.main([])
+    except Exception as e:     # roofline needs dryrun artifacts/subprocess
+        print(f"== roofline skipped: {type(e).__name__}: {e}")
+    print(f"\n== benchmarks.run done in {time.time() - t0:.0f}s, "
+          f"{failures} claim failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

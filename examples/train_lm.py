@@ -1,0 +1,43 @@
+"""Train a ~100M-class LM for a few hundred steps with checkpoint/restart
+and straggler watching (deliverable b: end-to-end training driver).
+
+Uses qwen2-0.5b reduced to ~smoke scale by default; pass --big for a
+~100M-parameter variant (slower on CPU).
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import os
+import tempfile
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.launch.train import train
+from repro.models import get_model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args(argv)
+
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ckpt_")
+    cfg = reduce_for_smoke(get_config(args.arch))
+    print(f"training {cfg.name} (reduced, "
+          f"{get_model(cfg).param_count():,} params) for {args.steps} "
+          f"steps; checkpoints in {ckpt}")
+
+    losses, wd = train(args.arch, smoke=True, steps=args.steps,
+                       batch_size=args.batch_size, seq_len=args.seq_len,
+                       ckpt_dir=ckpt, ckpt_every=25, log_every=25)
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(median step {wd.median_s * 1e3:.0f} ms, "
+          f"{len(wd.flagged)} straggler steps)")
+    print(f"resume any time with the same --ckpt-dir ({ckpt})")
+
+
+if __name__ == "__main__":
+    main()

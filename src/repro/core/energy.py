@@ -1,0 +1,87 @@
+"""Energy accounting + latency-energy Pareto utilities (paper Figs 3-5).
+
+``EnergyMeter`` integrates instantaneous power over intervals per hardware
+component — the simulation analogue of the paper's pynvml / RAPL / IPMI
+measurement stack. Components: one entry per accelerator ("acc0", "acc1"),
+plus "cpu", "dram", "disk", "ici"/"pcie" transfer media.
+
+Accelerator busy intervals are logged with (phi, utilization) so the DVFS
+study (Experiment 2) can attribute stage-wise energy at each frequency.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+
+@dataclass
+class EnergyMeter:
+    joules: Dict[str, float] = field(
+        default_factory=lambda: collections.defaultdict(float))
+    # per-stage attribution (prefill / decode / transfer / idle)
+    by_stage: Dict[str, float] = field(
+        default_factory=lambda: collections.defaultdict(float))
+
+    def add(self, component: str, joules: float, stage: str = "other"):
+        self.joules[component] += joules
+        self.by_stage[stage] += joules
+
+    def add_power(self, component: str, watts: float, seconds: float,
+                  stage: str = "other"):
+        self.add(component, watts * seconds, stage)
+
+    @property
+    def total_j(self) -> float:
+        return sum(self.joules.values())
+
+    def breakdown(self) -> Dict[str, float]:
+        return dict(self.joules)
+
+    def merge(self, other: "EnergyMeter") -> "EnergyMeter":
+        out = EnergyMeter()
+        for src in (self, other):
+            for k, v in src.joules.items():
+                out.joules[k] += v
+            for k, v in src.by_stage.items():
+                out.by_stage[k] += v
+        return out
+
+
+# ----------------------------------------------------------------------
+# Pareto frontier (paper Fig 5): (latency, energy) points over a freq grid
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class ParetoPoint:
+    phi: float            # relative frequency (or (phi_p, phi_d) encoded)
+    latency_s: float
+    energy_j: float
+    label: str = ""
+
+
+def pareto_frontier(points: Iterable[ParetoPoint]) -> List[ParetoPoint]:
+    """Non-dominated subset (lower latency AND lower energy is better)."""
+    pts = sorted(points, key=lambda p: (p.latency_s, p.energy_j))
+    front: List[ParetoPoint] = []
+    best_e = float("inf")
+    for p in pts:
+        if p.energy_j < best_e:
+            front.append(p)
+            best_e = p.energy_j
+    return front
+
+
+def min_energy_under_slo(points: Iterable[ParetoPoint],
+                         latency_slo_s: Optional[float]
+                         ) -> Optional[ParetoPoint]:
+    """SLO-aware frequency selection: min energy s.t. latency <= SLO."""
+    feasible = [p for p in points
+                if latency_slo_s is None or p.latency_s <= latency_slo_s]
+    if not feasible:
+        return None
+    return min(feasible, key=lambda p: p.energy_j)
+
+
+def sweet_spot(points: Iterable[ParetoPoint]) -> ParetoPoint:
+    """Unconstrained minimum-energy point (bottom of the U-curve)."""
+    return min(points, key=lambda p: p.energy_j)

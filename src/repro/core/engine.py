@@ -1,0 +1,400 @@
+"""Serving engine: one accelerator running prefill, decode, or both.
+
+One class, three roles (DESIGN.md section 4):
+
+  colocated   vLLM-V1-style continuous batching: progressive per-chunk KV
+              allocation, prefill-priority, and preemption-by-recompute of
+              the lowest-priority sequence when the pool is exhausted. The
+              serialized prefill/decode timeline IS the interference the
+              paper measures; the preemption churn at high batch IS the
+              paper's co-2gpus TPOT cliff (finding F2).
+  prefill     prefill-only; finished sequences are handed to the
+              orchestrator, which runs the KV store leg of the transfer.
+              Pages stay held until the store completes (backpressure).
+  decode      decode-only; admits transferred sequences when prompt + full
+              output reservation fits (waves, never churn); the KV FETCH
+              leg occupies the engine, so slower media degrade TPOT.
+
+Timing comes from the roofline CostModel at the engine's DVFS setting
+``phi`` (compute scales 1/phi, memory/interconnect do not). Energy is
+integrated per step at P(phi, utilization). In real mode the engine also
+executes a tiny model so token streams are bit-comparable across setups —
+the KV-handoff correctness test.
+"""
+from __future__ import annotations
+
+import bisect
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .costs import CostModel, StepCost
+from .energy import EnergyMeter
+from .kvcache import OutOfPages, PagedKVPool
+from .request import Request
+
+
+@dataclass(eq=False)
+class EngineSeq:
+    req: Request
+    prefill_target: int = 0        # tokens to prefill (prompt, or recompute)
+    prefill_done: int = 0
+    ctx: int = 0                   # materialized KV tokens in the pool
+    # real-mode payload
+    state: Any = None              # decode-state pytree (batch axis 1, B=1)
+    last_logits: Any = None
+    next_token: Optional[int] = None
+
+    @property
+    def seq_id(self) -> int:
+        return self.req.req_id
+
+    @property
+    def priority(self) -> int:
+        # FCFS: lower req_id = earlier arrival = higher priority
+        return self.req.req_id
+
+
+class Engine:
+    def __init__(self, name: str, role: str, cost: CostModel,
+                 pool: PagedKVPool, meter: EnergyMeter, *,
+                 phi: float = 1.0, prefill_token_budget: int = 8192,
+                 executor: Optional["RealExecutor"] = None,
+                 on_prefill_done: Optional[Callable] = None,
+                 prefix_cache=None):
+        assert role in ("colocated", "prefill", "decode")
+        self.name = name
+        self.role = role
+        self.cost = cost
+        self.pool = pool
+        self.meter = meter
+        self.phi = phi
+        self.budget = prefill_token_budget
+        self.executor = executor
+        self.on_prefill_done = on_prefill_done   # (engine, seq, t) -> None
+        # KV reuse (paper section II-C): prefill work for matched tokens is
+        # skipped. Simulation-only — in real mode the matched KV bytes are
+        # not actually materialized, so reuse is disabled there.
+        self.prefix_cache = prefix_cache if executor is None else None
+
+        self.t = 0.0                 # engine-local clock
+        self.busy_s = 0.0
+        self.waiting: List[EngineSeq] = []       # priority-sorted
+        self.prefilling: List[EngineSeq] = []    # priority-sorted
+        self.running: List[EngineSeq] = []       # decode set
+        self.decode_queue: deque = deque()       # (seq, handle, fetch_cost)
+        self.pending_fetch: deque = deque()
+        self.steps = 0
+        self.preemptions = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        seq = EngineSeq(req=req, prefill_target=req.prompt_len)
+        if self.prefix_cache is not None and req.prompt_tokens is not None:
+            hit = self.prefix_cache.lookup(req.prompt_tokens)
+            saved = hit.saved_tokens(req.prompt_len)
+            if saved > 0:
+                # matched KV is reused: only the remainder is computed
+                # (always leave >=1 token so the last-position logits run)
+                seq.prefill_done = min(req.prompt_len - hit.recompute_tokens,
+                                       req.prompt_len - 1)
+                req.reused_tokens = seq.prefill_done
+        self._enqueue_waiting(seq)
+
+    def _enqueue_waiting(self, seq: EngineSeq) -> None:
+        bisect.insort(self.waiting, seq, key=lambda s: s.priority)
+
+    def enqueue_decode(self, seq: EngineSeq, handle: Any, fetch_cost) -> None:
+        self.decode_queue.append((seq, handle, fetch_cost))
+
+    # ------------------------------------------------------------------
+    def has_work(self) -> bool:
+        if self.prefilling or self.running or self.pending_fetch:
+            return True
+        if self.waiting and self.role in ("colocated", "prefill"):
+            # progressive allocation: a single free page is enough to start
+            return self.pool.free_pages > 0
+        if self.decode_queue and self._can_admit_decode(
+                self.decode_queue[0][0]):
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    def _can_admit_decode(self, seq: EngineSeq) -> bool:
+        # reserve prompt + full output budget: disaggregated decode never
+        # preempts (waves instead of churn)
+        need = seq.ctx + (seq.req.output_len - seq.req.generated) + 1
+        return self.pool.can_fit(need)
+
+    def _admit(self) -> None:
+        if self.role in ("colocated", "prefill"):
+            # V1-style: admission is cheap; per-chunk allocation throttles
+            while self.waiting and self.pool.free_pages > 0:
+                seq = self.waiting.pop(0)
+                if seq.req.prefill_start_s is None:
+                    seq.req.prefill_start_s = self.t
+                bisect.insort(self.prefilling, seq,
+                              key=lambda s: s.priority)
+        if self.role == "decode":
+            while (self.decode_queue
+                   and self._can_admit_decode(self.decode_queue[0][0])):
+                seq, handle, fetch_cost = self.decode_queue.popleft()
+                reserve = seq.ctx + (seq.req.output_len
+                                     - seq.req.generated) + 1
+                self.pool.allocate(seq.seq_id, reserve)
+                self.pending_fetch.append((seq, handle, fetch_cost))
+
+    # ------------------------------------------------------------------
+    # one scheduler step; returns True if any progress was made
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        self._admit()
+        if self.pending_fetch:
+            self._fetch_step()
+            return True
+        if self.prefilling:
+            return self._prefill_step()
+        if self.running:
+            return self._decode_step()
+        return False
+
+    # ------------------------------------------------------------------
+    def _account(self, cost: StepCost, stage: str) -> float:
+        dt = cost.time(self.phi)
+        util = cost.utilization(self.phi)
+        self.meter.add_power(self.name, self.cost.power_w(self.phi, util),
+                             dt, stage=stage)
+        self.t += dt
+        self.busy_s += dt
+        self.steps += 1
+        return self.t
+
+    # ------------------------------------------------------------------
+    def _fetch_step(self) -> float:
+        """Run the KV fetch leg for one admitted sequence (decode role)."""
+        seq, handle, leg = self.pending_fetch.popleft()
+        for comp, joules in leg.energy_j.items():
+            self.meter.add(comp, joules, stage="transfer")
+        # the engine is occupied while the fetch lands in its HBM
+        self.meter.add_power(self.name, self.cost.idle_power_w(),
+                             leg.latency_s, stage="transfer")
+        self.t += leg.latency_s
+        self.busy_s += leg.latency_s
+        if self.executor is not None and handle is not None:
+            seq.state, seq.last_logits = self.executor.fetch(handle)
+        if seq.req.decode_start_s is None:
+            seq.req.decode_start_s = self.t
+        if seq.req.first_token_s is None:
+            # dis-*: the first token (argmax of the transferred prefill
+            # logits) is released once the KV lands on the decode side —
+            # so TTFT = prefill + store + queue + fetch (medium-sensitive)
+            seq.req.first_token_s = self.t
+            seq.req.generated = 1
+            if seq.next_token is not None:
+                seq.req.output_tokens.append(int(seq.next_token))
+        self.running.append(seq)
+        return self.t
+
+    # ------------------------------------------------------------------
+    # preemption (vLLM recompute-style)
+    # ------------------------------------------------------------------
+    def _victims_below(self, priority: int) -> List[EngineSeq]:
+        """Sequences holding pages, strictly lower priority, lowest first.
+
+        (A decode-victims-first variant was hypothesized to keep TTFT
+        clean under churn; measured: it TRIPLES recompute volume and
+        worsens both TTFT and TPOT — vLLM's pure arrival-priority order
+        is kept. See EXPERIMENTS.md reproduction caveats.)"""
+        holders = [s for s in self.running + self.prefilling
+                   if s.priority > priority
+                   and self.pool.has_seq(s.seq_id)]
+        return sorted(holders, key=lambda s: -s.priority)
+
+    def _preempt(self, seq: EngineSeq) -> None:
+        self.pool.free_seq(seq.seq_id)
+        self.preemptions += 1
+        if seq in self.running:
+            self.running.remove(seq)
+            seq.req.evictions += 1
+            redo = seq.req.prompt_len + seq.req.generated
+            seq.req.recomputed_tokens += redo
+            seq.prefill_target = redo
+        elif seq in self.prefilling:
+            self.prefilling.remove(seq)
+            seq.req.evictions += 1
+            seq.req.recomputed_tokens += seq.prefill_done
+        seq.prefill_done = 0
+        seq.ctx = 0
+        seq.state = None
+        self._enqueue_waiting(seq)
+
+    def _alloc_or_preempt(self, seq: EngineSeq, tokens: int) -> bool:
+        """Allocate; on exhaustion preempt strictly-lower-priority holders.
+        Returns False if the allocation is impossible right now."""
+        while True:
+            try:
+                self.pool.allocate(seq.seq_id, tokens)
+                return True
+            except OutOfPages:
+                victims = self._victims_below(seq.priority)
+                if not victims:
+                    return False
+                self._preempt(victims[0])
+
+    # ------------------------------------------------------------------
+    def _prefill_step(self) -> float:
+        budget = self.budget
+        chunks: List[Tuple[EngineSeq, int, int]] = []
+        for seq in list(self.prefilling):
+            if budget <= 0:
+                break
+            if seq not in self.prefilling:
+                continue   # preempted by an earlier seq's allocation
+            remaining = seq.prefill_target - seq.prefill_done
+            take = min(remaining, budget)
+            if take <= 0:
+                continue
+            if not self._alloc_or_preempt(seq, take):
+                # pool exhausted by higher-priority holders: take whatever
+                # fits (vLLM V1 chunked prefill absorbs the free slack —
+                # the behavior behind the co-* preemption churn at high
+                # batch, finding F2)
+                take = min(take,
+                           self.pool.free_pages * self.pool.page_size)
+                if take <= 0 or not self._alloc_or_preempt(seq, take):
+                    break
+            chunks.append((seq, seq.prefill_done, seq.prefill_done + take))
+            budget -= take
+        if not chunks:
+            # nothing schedulable: fall through to decode if possible
+            if self.running:
+                return self._decode_step()
+            return False
+
+        cost = self.cost.prefill_step_cost(
+            [(c1 - c0, c0, c1) for _, c0, c1 in chunks])
+        t_end = self._account(cost, "prefill")
+
+        for seq, c0, c1 in chunks:
+            if not self.pool.has_seq(seq.seq_id):
+                continue   # preempted later in the same step's alloc loop
+            seq.prefill_done = c1
+            seq.ctx = c1
+            if seq.prefill_done >= seq.prefill_target:
+                self.prefilling.remove(seq)
+                seq.req.prefill_done_s = t_end
+                self.pool.touch(seq.seq_id)
+                if self.prefix_cache is not None and \
+                        seq.req.prompt_tokens is not None:
+                    self.prefix_cache.insert(seq.req.prompt_tokens)
+                if self.executor is not None:
+                    seq.state, seq.last_logits, seq.next_token = \
+                        self.executor.prefill(seq)
+                if self.role == "colocated":
+                    if seq.req.first_token_s is None:
+                        # first token sampled from prefill logits (vLLM)
+                        seq.req.first_token_s = t_end
+                        seq.req.generated = 1
+                        if seq.next_token is not None:
+                            seq.req.output_tokens.append(int(seq.next_token))
+                    self.running.append(seq)
+                else:
+                    self.on_prefill_done(self, seq, t_end)
+        return True
+
+    # ------------------------------------------------------------------
+    def _decode_step(self) -> float:
+        # grow each running seq by one token (colocated; decode pre-reserved)
+        if self.role != "decode":
+            for seq in sorted(self.running, key=lambda s: s.priority):
+                if seq not in self.running:
+                    continue   # preempted by an earlier seq's growth
+                if not self._alloc_or_preempt(seq, 1):
+                    # lowest-priority holder and no room: preempt self
+                    self._preempt(seq)
+        if not self.running:
+            return False
+        batch = list(self.running)
+        total_ctx = sum(s.ctx for s in batch)
+        cost = self.cost.decode_cost(len(batch), total_ctx)
+        t_end = self._account(cost, "decode")
+
+        if self.executor is not None:
+            self.executor.decode_batch(batch)
+
+        for seq in batch:
+            if seq not in self.running:
+                continue   # preempted during the growth loop
+            seq.ctx += 1
+            self.pool.touch(seq.seq_id)
+            seq.req.generated += 1
+            if seq.next_token is not None:
+                seq.req.output_tokens.append(int(seq.next_token))
+            if seq.req.generated >= seq.req.output_len:
+                seq.req.finish_s = t_end
+                self.pool.free_seq(seq.seq_id)
+                self.running.remove(seq)
+        return True
+
+
+# ----------------------------------------------------------------------
+# Real execution (tiny models on CPU): timing stays simulated, but tokens
+# are really computed so setups can be compared bit-for-bit.
+# ----------------------------------------------------------------------
+class RealExecutor:
+    """Executes prefill/decode with an actual model; greedy sampling."""
+
+    def __init__(self, model, params, transfer_path=None):
+        import jax
+        import jax.numpy as jnp
+        self.model = model
+        self.params = params
+        self.path = transfer_path
+        self._jnp = jnp
+        self._jax = jax
+
+    def _context_tokens(self, seq: EngineSeq) -> np.ndarray:
+        """prompt + already-emitted tokens (recompute path needs both)."""
+        toks = list(seq.req.prompt_tokens)
+        need = seq.prefill_target - len(toks)
+        if need > 0:
+            toks = toks + seq.req.output_tokens[:need]
+        return np.asarray(toks[:seq.prefill_target], dtype=np.int32)
+
+    def prefill(self, seq: EngineSeq):
+        jnp = self._jnp
+        toks = jnp.asarray(self._context_tokens(seq))[None, :]
+        s_max = seq.req.prompt_len + seq.req.output_len + 2
+        logits, state = self.model.prefill(
+            self.params, {"tokens": toks}, s_max=s_max)
+        next_token = int(jnp.argmax(logits[0]))
+        return state, logits, next_token
+
+    def store(self, seq: EngineSeq):
+        payload = (seq.state, seq.last_logits)
+        if self.path is None:
+            return payload
+        return self.path.store(payload)
+
+    def fetch(self, handle):
+        if self.path is None:
+            return handle
+        return self.path.fetch(handle)
+
+    def decode_batch(self, batch: List[EngineSeq]) -> None:
+        jax, jnp = self._jax, self._jnp
+        tokens = jnp.asarray([s.next_token for s in batch], jnp.int32)
+        pos = jnp.asarray([s.ctx for s in batch], jnp.int32)
+        states = [s.state for s in batch]
+        joined = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=1), *states)
+        logits, new_state = self.model.decode_step(
+            self.params, tokens, joined, pos)
+        nxt = jnp.argmax(logits, axis=-1)
+        for i, seq in enumerate(batch):
+            seq.state = jax.tree.map(
+                lambda x: x[:, i:i + 1] if x.ndim > 1 else x[i:i + 1],
+                new_state)
+            seq.next_token = int(nxt[i])

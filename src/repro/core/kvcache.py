@@ -1,0 +1,180 @@
+"""Paged KV cache pool: the paper's central serving data structure.
+
+Host-side bookkeeping (block tables, freelist, LRU eviction) that drives
+every scheduling decision in the engines. It is deliberately independent of
+whether KV bytes are physically resident (TPU-scale simulation) or backed by
+real device pages (``DevicePagedKV`` below, used by the tiny-model
+integration path and the Pallas paged-decode kernel).
+
+Eviction semantics mirror vLLM's recompute-preemption: evicting a sequence
+frees ALL its pages; the sequence must re-run prefill over its full context
+(prompt + generated so far) before decoding can continue. That recompute is
+what produces the paper's co-2gpus TPOT cliff (finding F2).
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+
+class OutOfPages(Exception):
+    pass
+
+
+@dataclass
+class SeqAlloc:
+    seq_id: int
+    pages: List[int] = field(default_factory=list)
+    tokens: int = 0                    # tokens currently materialized
+
+
+class PagedKVPool:
+    """Fixed-size page pool with per-sequence block tables + LRU eviction."""
+
+    def __init__(self, num_pages: int, page_size: int = 16):
+        assert num_pages > 0
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.seqs: Dict[int, SeqAlloc] = {}
+        self._lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+
+    # ------------------------------------------------------------------
+    # freelist sanity cap: state-only archs (kv_bytes_per_token == 0, e.g.
+    # rwkv6) would otherwise size the pool at pool_bytes/page_size pages —
+    # a billion-entry freelist. 2^20 pages = 16M tokens never binds.
+    MAX_PAGES = 1 << 20
+
+    @classmethod
+    def from_bytes(cls, pool_bytes: float, kv_bytes_per_token: int,
+                   page_size: int = 16) -> "PagedKVPool":
+        per_page = max(kv_bytes_per_token, 1) * page_size
+        pages = min(max(int(pool_bytes // per_page), 1), cls.MAX_PAGES)
+        return cls(num_pages=pages, page_size=page_size)
+
+    # ------------------------------------------------------------------
+    def pages_for(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self.free)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    def block_table(self, seq_id: int) -> List[int]:
+        return list(self.seqs[seq_id].pages)
+
+    def tokens_of(self, seq_id: int) -> int:
+        return self.seqs[seq_id].tokens
+
+    def has_seq(self, seq_id: int) -> bool:
+        return seq_id in self.seqs
+
+    # ------------------------------------------------------------------
+    def can_fit(self, tokens: int) -> bool:
+        return self.pages_for(tokens) <= len(self.free)
+
+    def allocate(self, seq_id: int, tokens: int) -> List[int]:
+        """Materialize ``tokens`` MORE tokens for seq_id; returns any newly
+        granted pages. Raises OutOfPages when the freelist is exhausted."""
+        alloc = self.seqs.setdefault(seq_id, SeqAlloc(seq_id))
+        new_total = alloc.tokens + tokens
+        need = self.pages_for(new_total) - len(alloc.pages)
+        if need > len(self.free):
+            raise OutOfPages(
+                f"seq {seq_id}: need {need} pages, {len(self.free)} free")
+        granted = [self.free.pop() for _ in range(need)]
+        alloc.pages.extend(granted)
+        alloc.tokens = new_total
+        self.touch(seq_id)
+        return granted
+
+    def free_seq(self, seq_id: int) -> int:
+        """Release a sequence's pages; returns how many were freed."""
+        alloc = self.seqs.pop(seq_id, None)
+        self._lru.pop(seq_id, None)
+        if alloc is None:
+            return 0
+        self.free.extend(alloc.pages)
+        return len(alloc.pages)
+
+    # ------------------------------------------------------------------
+    def touch(self, seq_id: int) -> None:
+        self._lru[seq_id] = None
+        self._lru.move_to_end(seq_id)
+
+    def lru_candidates(self, exclude: Optional[Set[int]] = None
+                       ) -> List[int]:
+        exclude = exclude or set()
+        return [s for s in self._lru if s not in exclude]
+
+    def evict_lru(self, exclude: Optional[Set[int]] = None) -> Optional[int]:
+        """Evict the least-recently-used sequence; returns its id."""
+        for seq_id in self.lru_candidates(exclude):
+            self.free_seq(seq_id)
+            return seq_id
+        return None
+
+    # invariant checks (property tests assert these hold under any op mix)
+    def check_invariants(self) -> None:
+        held = [p for a in self.seqs.values() for p in a.pages]
+        all_pages = held + self.free
+        assert len(all_pages) == self.num_pages, "page leak/duplication"
+        assert len(set(all_pages)) == self.num_pages, "page double-grant"
+        for a in self.seqs.values():
+            assert len(a.pages) == self.pages_for(a.tokens), \
+                f"seq {a.seq_id}: page count mismatch"
+
+
+# ----------------------------------------------------------------------
+# Device-backed pool for the dense-family real path (tiny models on CPU,
+# Pallas paged kernel on TPU): physical pages [L, P, page, KV, hd].
+# ----------------------------------------------------------------------
+class DevicePagedKV:
+    def __init__(self, pool: PagedKVPool, num_layers: int, kv_heads: int,
+                 head_dim: int, dtype=np.float32):
+        import jax.numpy as jnp
+        self.pool = pool
+        shape = (num_layers, pool.num_pages, pool.page_size, kv_heads,
+                 head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+
+    def write_prefill(self, seq_id: int, ks, vs) -> None:
+        """ks/vs: [L, S, KV, hd] dense prefill output -> scatter to pages."""
+        import jax.numpy as jnp
+        pages = self.pool.block_table(seq_id)
+        S = ks.shape[1]
+        ps = self.pool.page_size
+        for i, page in enumerate(pages):
+            lo, hi = i * ps, min((i + 1) * ps, S)
+            if lo >= S:
+                break
+            chunk_k = ks[:, lo:hi]
+            chunk_v = vs[:, lo:hi]
+            self.k = self.k.at[:, page, :hi - lo].set(chunk_k)
+            self.v = self.v.at[:, page, :hi - lo].set(chunk_v)
+
+    def write_token(self, seq_id: int, k_tok, v_tok, pos: int) -> None:
+        """k_tok/v_tok: [L, KV, hd] one token at absolute position pos."""
+        pages = self.pool.block_table(seq_id)
+        page = pages[pos // self.pool.page_size]
+        slot = pos % self.pool.page_size
+        self.k = self.k.at[:, page, slot].set(k_tok)
+        self.v = self.v.at[:, page, slot].set(v_tok)
+
+    def gather_dense(self, seq_id: int):
+        """-> (k [L, S, KV, hd], v) contiguous view for verification."""
+        import jax.numpy as jnp
+        pages = self.pool.block_table(seq_id)
+        S = self.pool.tokens_of(seq_id)
+        k = jnp.concatenate([self.k[:, p] for p in pages], axis=1)[:, :S]
+        v = jnp.concatenate([self.v[:, p] for p in pages], axis=1)[:, :S]
+        return k, v

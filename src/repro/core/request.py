@@ -1,0 +1,133 @@
+"""Requests, per-request metrics, and the paper's synthetic workload.
+
+The workload mirrors the paper's RandomDataset setup (section IV-D):
+fixed input length 16,384, output length 256, batch size swept 2..64,
+request rate infinite (all requests submitted at t=0).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class SLO:
+    ttft_s: Optional[float] = None   # time-to-first-token target
+    tpot_s: Optional[float] = None   # time-per-output-token target
+
+
+@dataclass(eq=False)
+class Request:
+    req_id: int
+    prompt_len: int
+    output_len: int
+    arrival_s: float = 0.0
+    slo: SLO = field(default_factory=SLO)
+    # real-mode payload (tiny models in integration tests): actual token ids
+    prompt_tokens: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------------
+    # lifecycle bookkeeping (filled in by the engines)
+    # ------------------------------------------------------------------
+    prefill_start_s: Optional[float] = None
+    prefill_done_s: Optional[float] = None
+    transfer_done_s: Optional[float] = None
+    first_token_s: Optional[float] = None      # first decode-step output
+    finish_s: Optional[float] = None
+    decode_start_s: Optional[float] = None     # first decode step time
+    generated: int = 0
+    output_tokens: List[int] = field(default_factory=list)
+    # recompute accounting (the paper's eviction cliff mechanism)
+    evictions: int = 0
+    recomputed_tokens: int = 0
+    # KV reuse (paper section II-C): prefill tokens skipped via cache hits
+    reused_tokens: int = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Mean inter-token time once decoding has begun (paper's TPOT)."""
+        if self.finish_s is None or self.first_token_s is None:
+            return None
+        n = self.generated
+        if n <= 1:
+            return 0.0
+        return (self.finish_s - self.first_token_s) / (n - 1)
+
+    @property
+    def done(self) -> bool:
+        return self.finish_s is not None
+
+
+def random_workload(batch_size: int, *, input_len: int = 16_384,
+                    output_len: int = 256, vocab_size: int = 0,
+                    seed: int = 0, arrival_s: float = 0.0,
+                    shared_prefix_len: int = 0) -> List[Request]:
+    """The paper's RandomDataset: ``batch_size`` requests at t=0.
+
+    ``shared_prefix_len`` > 0 gives every request an identical prefix
+    (the KV-reuse / RAG scenario of section II-C).
+    """
+    rng = np.random.default_rng(seed)
+    prefix = None
+    if shared_prefix_len and vocab_size:
+        prefix = rng.integers(0, vocab_size, shared_prefix_len)
+    reqs = []
+    for i in range(batch_size):
+        tokens = None
+        if vocab_size:
+            tokens = rng.integers(0, vocab_size, input_len)
+            if prefix is not None:
+                tokens[:shared_prefix_len] = prefix
+        reqs.append(Request(req_id=i, prompt_len=input_len,
+                            output_len=output_len, arrival_s=arrival_s,
+                            prompt_tokens=tokens))
+    return reqs
+
+
+# ----------------------------------------------------------------------
+# aggregate metrics over a finished workload
+# ----------------------------------------------------------------------
+@dataclass
+class WorkloadMetrics:
+    median_ttft_s: float
+    p99_ttft_s: float
+    median_tpot_s: float
+    p99_tpot_s: float
+    prefill_throughput_tok_s: float
+    decode_throughput_tok_s: float
+    makespan_s: float
+    total_evictions: int
+    total_recomputed_tokens: int
+
+
+def summarize(reqs: List[Request]) -> WorkloadMetrics:
+    assert all(r.done for r in reqs), "workload not finished"
+    ttfts = np.array([r.ttft_s for r in reqs])
+    tpots = np.array([r.tpot_s for r in reqs])
+    t0 = min(r.arrival_s for r in reqs)
+    prefill_end = max(r.prefill_done_s for r in reqs)
+    makespan = max(r.finish_s for r in reqs) - t0
+    prefill_tokens = sum(r.prompt_len + r.recomputed_tokens
+                         - r.reused_tokens for r in reqs)
+    decode_tokens = sum(r.generated for r in reqs)
+    return WorkloadMetrics(
+        median_ttft_s=float(np.median(ttfts)),
+        p99_ttft_s=float(np.percentile(ttfts, 99)),
+        median_tpot_s=float(np.median(tpots)),
+        p99_tpot_s=float(np.percentile(tpots, 99)),
+        prefill_throughput_tok_s=prefill_tokens / max(prefill_end - t0, 1e-9),
+        decode_throughput_tok_s=decode_tokens / max(makespan, 1e-9),
+        makespan_s=float(makespan),
+        total_evictions=sum(r.evictions for r in reqs),
+        total_recomputed_tokens=sum(r.recomputed_tokens for r in reqs),
+    )

@@ -1,0 +1,137 @@
+"""jit'd dispatch wrappers over the Pallas kernels and their jnp oracles.
+
+Every model/eingine call site goes through this module. Backend selection:
+
+  auto             -> 'pallas' on TPU, 'ref' elsewhere (CPU container,
+                      dry-run lowering, XLA-fused reference path)
+  ref              -> pure-jnp oracle (kernels/ref.py)
+  pallas           -> compiled Pallas TPU kernel
+  pallas_interpret -> Pallas kernel body executed in Python on CPU
+                      (correctness validation in this container)
+
+Set the process-wide default with ``set_default_backend`` or the
+REPRO_KERNEL_BACKEND environment variable.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_prefill as _flash
+from . import mamba2_ssd as _ssd
+from . import paged_decode as _paged
+from . import ref
+from . import rwkv6_scan as _rwkv
+
+_DEFAULT = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+
+
+def set_default_backend(backend: str) -> None:
+    global _DEFAULT
+    assert backend in ("auto", "ref", "pallas", "pallas_interpret"), backend
+    _DEFAULT = backend
+
+
+def resolve_backend(backend: Optional[str]) -> str:
+    b = backend or _DEFAULT
+    if b == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return b
+
+
+# ----------------------------------------------------------------------
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, backend: Optional[str] = None):
+    b = resolve_backend(backend)
+    if b == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       q_offset=q_offset)
+    return _flash.flash_attention(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset,
+                                  interpret=(b == "pallas_interpret"))
+
+
+def paged_attention(q, k_pages, v_pages, block_table, seq_lens, *,
+                    backend: Optional[str] = None):
+    b = resolve_backend(backend)
+    if b == "ref":
+        return ref.paged_attention_ref(q, k_pages, v_pages, block_table,
+                                       seq_lens)
+    return _paged.paged_attention(q, k_pages, v_pages, block_table, seq_lens,
+                                  interpret=(b == "pallas_interpret"))
+
+
+# ----------------------------------------------------------------------
+def _pad_seq(x, chunk, axis=1, value=0.0):
+    T = x.shape[axis]
+    pad = (-T) % chunk
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def rwkv6(r, k, v, w, u, state, *, chunk: int = 64,
+          backend: Optional[str] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b = resolve_backend(backend)
+    if b == "ref":
+        return ref.rwkv6_scan_ref(r, k, v, w, u, state)
+    if state is None:
+        B, _, NH, hd = r.shape
+        state = jnp.zeros((B, NH, hd, hd), jnp.float32)
+    T = r.shape[1]
+    # pad to chunk multiple: w=1 (zero log-decay), k=0 -> recurrence no-op
+    rp = _pad_seq(r, chunk)
+    kp = _pad_seq(k, chunk)
+    vp = _pad_seq(v, chunk)
+    wp = _pad_seq(w, chunk, value=1.0)
+    y, s = _rwkv.rwkv6_scan(rp, kp, vp, wp, u, state, chunk=chunk,
+                            interpret=(b == "pallas_interpret"))
+    return y[:, :T], s
+
+
+def rwkv6_step(r, k, v, w, u, state) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrent step (decode). r..w: [B, NH, hd]."""
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    y = jnp.einsum("bhc,bhcj->bhj", rf, state)
+    y = y + jnp.einsum("bhc,bhc->bh", rf,
+                       u.astype(jnp.float32)[None] * kf)[..., None] * vf
+    state = wf[..., :, None] * state + kf[..., :, None] * vf[..., None, :]
+    return y.astype(r.dtype), state
+
+
+def mamba2(x, dt, A, B_mat, C_mat, D, state, *, chunk: int = 128,
+           backend: Optional[str] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b = resolve_backend(backend)
+    if b == "ref":
+        return ref.mamba2_ssd_ref(x, dt, A, B_mat, C_mat, D, state)
+    if state is None:
+        B, _, NH, P = x.shape
+        state = jnp.zeros((B, NH, B_mat.shape[-1], P), jnp.float32)
+    T = x.shape[1]
+    xp = _pad_seq(x, chunk)
+    dtp = _pad_seq(dt, chunk)     # dt=0 -> decay 1, contribution 0: no-op
+    Bp = _pad_seq(B_mat, chunk)
+    Cp = _pad_seq(C_mat, chunk)
+    y, s = _ssd.mamba2_ssd(xp, dtp, A, Bp, Cp, D, state, chunk=chunk,
+                           interpret=(b == "pallas_interpret"))
+    return y[:, :T], s
+
+
+def mamba2_step(x, dt, A, B_mat, C_mat, D, state
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token SSM step (decode). x: [B,NH,P]; dt: [B,NH];
+    B_mat/C_mat: [B,N]; state: [B,NH,N,P]."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(A.astype(jnp.float32)[None] * dtf)       # [B, NH]
+    state = (decay[..., None, None] * state
+             + B_mat.astype(jnp.float32)[:, None, :, None]
+             * (dtf[..., None] * xf)[:, :, None, :])
+    y = jnp.einsum("bhnp,bn->bhp", state, C_mat.astype(jnp.float32))
+    y = y + D.astype(jnp.float32)[None, :, None] * xf
+    return y.astype(x.dtype), state

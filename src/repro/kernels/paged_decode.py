@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: paged attention for the decode stage.
+
+Decode is the memory-bound stage (paper section II-A) and sets TPOT. The
+central data structure of the paper's serving systems — the *paged KV
+cache* (vLLM PagedAttention) — is indexed here directly on-chip:
+
+  * The block table rides in SMEM as a *scalar-prefetch* operand
+    (PrefetchScalarGridSpec). The K/V page BlockSpec index_map dereferences
+    ``block_table[b, j]`` to pick which physical HBM page the pipeline DMAs
+    into VMEM next — the gather never materializes a contiguous KV copy.
+  * One grid cell per (batch, kv_head, page); online softmax accumulates in
+    VMEM scratch across the sequential page dimension.
+  * Pages past ``seq_len`` are skipped with pl.when — ragged batches pay
+    only for their own length.
+  * GQA: the G=H/KV query heads of a kv-head share the fetched page.
+
+The per-token arithmetic intensity of decode is ~1 FLOP/byte of KV — this
+kernel's job is purely to keep HBM streaming at line rate with no wasted
+bytes, which is why page granularity (not sequence granularity) matters.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(block_table, seq_lens,          # scalar-prefetch (SMEM)
+                  q_ref, k_ref, v_ref, o_ref,     # VMEM blocks
+                  m_ref, l_ref, acc_ref, *,       # VMEM scratch
+                  scale: float, page: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)            # page index within the sequence
+    npages = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = seq_lens[b]
+    in_use = j * page < seq_len
+
+    @pl.when(in_use)
+    def _body():
+        g, hd = q_ref.shape[-2], q_ref.shape[-1]
+        q = q_ref[...].reshape(g, hd)
+        k = k_ref[...].reshape(page, hd)
+        v = v_ref[...].reshape(page, hd)
+
+        s = jax.lax.dot_general(
+            q.astype(jnp.float32), k.astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # [G, page]
+
+        kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        s = jnp.where(kpos < seq_len, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_next = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_next)
+        p = jnp.exp(s - m_next)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_next
+
+    @pl.when(j == npages - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / safe).reshape(o_ref.shape).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                    v_pages: jnp.ndarray, block_table: jnp.ndarray,
+                    seq_lens: jnp.ndarray, *,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: [B, H, hd]; k_pages/v_pages: [P, page, KV, hd];
+    block_table: [B, max_pages] int32; seq_lens: [B] int32 -> [B, H, hd].
+    """
+    B, H, hd = q.shape
+    page, KV = k_pages.shape[1], k_pages.shape[2]
+    G = H // KV
+    max_pages = block_table.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+
+    qg = q.reshape(B, KV, G, hd)
+    # [P, page, KV, hd] -> [KV, P, page, hd]: page-major per kv-head so a
+    # BlockSpec block is one physical page of one kv head.
+    kp = k_pages.transpose(2, 0, 1, 3)
+    vp = v_pages.transpose(2, 0, 1, 3)
+
+    grid = (B, KV, max_pages)
+    kernel = functools.partial(_paged_kernel, scale=scale, page=page)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, h, j, bt, sl: (b, h, 0, 0)),
+            # Dereference the block table to pick the HBM page to DMA.
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b, h, j, bt, sl: (h, bt[b, j], 0, 0)),
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b, h, j, bt, sl: (h, bt[b, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, bt, sl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, seq_lens, qg, kp, vp)
+
+    return out.reshape(B, H, hd)

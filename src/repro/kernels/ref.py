@@ -1,0 +1,158 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references (kernel tests assert allclose against
+them) AND the CPU/dry-run execution path (``ops.py`` dispatches here when not
+running on TPU, so the whole framework runs on CPU and the lowered HLO used
+for roofline analysis is clean XLA attention/scan code).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------------------------------------------------
+# Flash attention (prefill): causal GQA attention, optional sliding window
+# ----------------------------------------------------------------------
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True, window: int = 0,
+                        q_offset: int = 0) -> jnp.ndarray:
+    """q: [B, S, H, hd]; k, v: [B, T, KV, hd] -> [B, S, H, hd].
+
+    ``q_offset`` places the query block at absolute position offset within
+    the key sequence (used for chunked prefill).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    logits = logits / np.sqrt(hd)
+    qpos = jnp.arange(S) + q_offset
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# Paged attention (decode): one query token vs block-table-indexed KV pages
+# ----------------------------------------------------------------------
+def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray, block_table: jnp.ndarray,
+                        seq_lens: jnp.ndarray) -> jnp.ndarray:
+    """q: [B, H, hd]; k_pages/v_pages: [P, page, KV, hd];
+    block_table: [B, max_pages] int32 (entries past the sequence are
+    arbitrary); seq_lens: [B] int32 -> out [B, H, hd].
+    """
+    B, H, hd = q.shape
+    page = k_pages.shape[1]
+    KV = k_pages.shape[2]
+    G = H // KV
+    max_pages = block_table.shape[1]
+    T = max_pages * page
+
+    # Gather this sequence's pages into a contiguous [B, T, KV, hd] view.
+    k_seq = k_pages[block_table].reshape(B, T, KV, hd)
+    v_seq = v_pages[block_table].reshape(B, T, KV, hd)
+
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg,
+                        k_seq.astype(jnp.float32)) / np.sqrt(hd)
+    valid = jnp.arange(T)[None, :] < seq_lens[:, None]        # [B, T]
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v_seq.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# RWKV6 (Finch) time-mix recurrence with data-dependent per-channel decay
+# ----------------------------------------------------------------------
+def rwkv6_scan_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   w: jnp.ndarray, u: jnp.ndarray,
+                   state: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential oracle of the RWKV6 recurrence.
+
+    r,k,v: [B, T, NH, hd]; w: [B, T, NH, hd] (per-channel decay in (0,1),
+    already exp(-exp(.)) transformed); u: [NH, hd] bonus.
+    state: [B, NH, hd, hd] (key-dim x value-dim), default zeros.
+    Returns (out [B,T,NH,hd], final_state).
+
+      out_t = (S_t^T r_t) + (r_t . (u*k_t)) v_t
+      S_{t+1} = diag(w_t) S_t + k_t v_t^T
+    """
+    B, T, NH, hd = r.shape
+    if state is None:
+        state = jnp.zeros((B, NH, hd, hd), jnp.float32)
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                      # [B, NH, hd]
+        # state contribution: sum_c r[c] * S[c, :]
+        y = jnp.einsum("bhc,bhcj->bhj", rt, S)
+        # bonus (current token) contribution
+        y = y + jnp.einsum("bhc,bhc->bh", rt, uf[None] * kt)[..., None] * vt
+        S = wt[..., :, None] * S + kt[..., :, None] * vt[..., None, :]
+        return S, y
+
+    xs = (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+          jnp.moveaxis(vf, 1, 0), jnp.moveaxis(wf, 1, 0))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), state
+
+
+# ----------------------------------------------------------------------
+# Mamba2 SSD recurrence (scalar-per-head decay)
+# ----------------------------------------------------------------------
+def mamba2_ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                   B_mat: jnp.ndarray, C_mat: jnp.ndarray,
+                   D: Optional[jnp.ndarray] = None,
+                   state: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential oracle of the Mamba2 state-space recurrence.
+
+    x: [B, T, NH, P] inputs; dt: [B, T, NH] (softplus-ed step, > 0);
+    A: [NH] (negative; decay = exp(A*dt)); B_mat/C_mat: [B, T, N] (shared
+    across heads, 1 group); D: [NH] skip, optional;
+    state: [B, NH, N, P], default zeros.
+
+      S_t = exp(A dt_t) S_{t-1} + B_t (dt_t x_t)^T
+      y_t = S_t^T C_t + D x_t
+    """
+    Bsz, T, NH, P = x.shape
+    N = B_mat.shape[-1]
+    if state is None:
+        state = jnp.zeros((Bsz, NH, N, P), jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B_mat.astype(jnp.float32)
+    Cf = C_mat.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct = inp                      # [B,NH,P],[B,NH],[B,N],[B,N]
+        decay = jnp.exp(Af[None] * dtt)            # [B, NH]
+        S = (decay[..., None, None] * S
+             + Bt[:, None, :, None] * (dtt[..., None] * xt)[:, :, None, :])
+        y = jnp.einsum("bhnp,bn->bhp", S, Ct)
+        return S, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    state, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype), state

@@ -1,0 +1,78 @@
+"""Serving launcher: run the paper's setups on any zoo architecture.
+
+Two modes:
+  * simulation (default): TPU-target timing/energy via the roofline cost
+    model — the paper's benchmarking mode, any arch, any batch size.
+  * --real: reduced config executed on CPU with real KV transfers between
+    engines (correctness mode; token streams are printed/compared).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama32-3b \
+      --setup dis-ici --batch-size 16
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import Cluster, RealExecutor, SETUPS, random_workload
+from repro.models import get_model
+
+
+def serve(arch: str, setup: str, *, batch_size: int = 16,
+          input_len: int = 16_384, output_len: int = 256,
+          phi: float = 1.0, real: bool = False, seed: int = 0,
+          verbose: bool = True):
+    cfg = get_config(arch)
+    executor_factory = None
+    if real:
+        cfg = reduce_for_smoke(cfg)
+        input_len = min(input_len, 64)
+        output_len = min(output_len, 8)
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed))
+
+        def executor_factory(path):
+            return RealExecutor(model, params, transfer_path=path)
+
+    reqs = random_workload(batch_size, input_len=input_len,
+                           output_len=output_len,
+                           vocab_size=cfg.vocab_size if real else 0,
+                           seed=seed)
+    res = Cluster(setup, cfg, phi=phi,
+                  executor_factory=executor_factory).run(reqs)
+    if verbose:
+        m = res.metrics
+        print(f"[serve] {setup} arch={arch} bs={batch_size} phi={phi}")
+        print(f"  median TTFT {m.median_ttft_s:.3f}s  "
+              f"median TPOT {m.median_tpot_s * 1e3:.2f}ms")
+        print(f"  prefill tput {m.prefill_throughput_tok_s:.0f} tok/s  "
+              f"decode tput {m.decode_throughput_tok_s:.0f} tok/s")
+        print(f"  energy {res.energy.total_j / 1e3:.2f} kJ  "
+              f"({res.joules_per_token:.4f} J/token)  "
+              f"evictions={m.total_evictions}")
+        print(f"  breakdown: " + "  ".join(
+            f"{k}={v / 1e3:.2f}kJ" for k, v in
+            sorted(res.energy.breakdown().items())))
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama32-3b")
+    ap.add_argument("--setup", default="dis-ici", choices=SETUPS)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--input-len", type=int, default=16_384)
+    ap.add_argument("--output-len", type=int, default=256)
+    ap.add_argument("--phi", type=float, default=1.0)
+    ap.add_argument("--real", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    serve(args.arch, args.setup, batch_size=args.batch_size,
+          input_len=args.input_len, output_len=args.output_len,
+          phi=args.phi, real=args.real, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

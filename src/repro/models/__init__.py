@@ -1,0 +1,5 @@
+from . import api, encdec, layers, mamba2, moe, rwkv6, transformer, vlm
+from .api import Model, get_model
+
+__all__ = ["Model", "get_model", "api", "layers", "transformer", "moe",
+           "rwkv6", "mamba2", "encdec", "vlm"]

@@ -1,0 +1,256 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The modality frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings [B, S_src, frontend_dim]; a learned
+projector maps them to d_model. The encoder is bidirectional; the decoder
+is causal with cross-attention into the encoder output.
+
+Serving split (the paper's prefill/decode decomposition for enc-dec):
+  prefill  = encoder forward + cross-KV projection + decoder-prefix forward
+  decode   = one decoder token: cached self-attention + cross-attention
+Handoff payload = decoder self-KV (grows per token) + cross-KV (fixed,
+proportional to source length).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from . import layers as L
+from . import transformer as TF
+
+
+class EncDecState(NamedTuple):
+    self_k: jnp.ndarray    # [Ld, B, S_max, KV, hd]
+    self_v: jnp.ndarray
+    cross_k: jnp.ndarray   # [Ld, B, S_src, KV, hd]
+    cross_v: jnp.ndarray
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+def init_encoder_block(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(rng)
+    pdt = L.dtype_of(cfg.param_dtype)
+    return {
+        "attn": L.init_attention(k1, cfg),
+        "mlp": L.init_mlp(k2, cfg),
+        "norm_attn": L.init_rms_norm(cfg.d_model, pdt),
+        "norm_mlp": L.init_rms_norm(cfg.d_model, pdt),
+    }
+
+
+def init_decoder_block(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    pdt = L.dtype_of(cfg.param_dtype)
+    return {
+        "self_attn": L.init_attention(k1, cfg),
+        "cross_attn": L.init_attention(k2, cfg),
+        "mlp": L.init_mlp(k3, cfg),
+        "norm_self": L.init_rms_norm(cfg.d_model, pdt),
+        "norm_cross": L.init_rms_norm(cfg.d_model, pdt),
+        "norm_mlp": L.init_rms_norm(cfg.d_model, pdt),
+    }
+
+
+def init(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    e = cfg.encdec
+    k_emb, k_enc, k_dec, k_proj = jax.random.split(rng, 4)
+    pdt = L.dtype_of(cfg.param_dtype)
+    enc_keys = jax.random.split(k_enc, e.num_encoder_layers)
+    dec_keys = jax.random.split(k_dec, e.num_decoder_layers)
+    return {
+        "embed": L.init_embedding(k_emb, cfg),
+        "frontend_proj": {
+            "w": (jax.random.normal(k_proj, (e.frontend_dim, cfg.d_model))
+                  * 0.02).astype(pdt),
+            "b": jnp.zeros((cfg.d_model,), pdt),
+        },
+        "encoder": jax.vmap(lambda k: init_encoder_block(k, cfg))(enc_keys),
+        "decoder": jax.vmap(lambda k: init_decoder_block(k, cfg))(dec_keys),
+    }
+
+
+# ----------------------------------------------------------------------
+# encoder
+# ----------------------------------------------------------------------
+def encode(params, src_embeds: jnp.ndarray, cfg: ModelConfig,
+           remat: bool = False) -> jnp.ndarray:
+    """src_embeds: [B, S_src, frontend_dim] -> [B, S_src, d]."""
+    fp = params["frontend_proj"]
+    x = (src_embeds.astype(L.dtype_of(cfg.compute_dtype)) @ fp["w"] + fp["b"])
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(h, lp):
+        hn = L.rms_norm(h, lp["norm_attn"], cfg.norm_eps)
+        q, k, v = L.qkv_project(lp["attn"], hn, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        attn = L.flash_gqa(q, k, v, causal=False)
+        h = h + L.out_project(lp["attn"], attn, cfg)
+        hn = L.rms_norm(h, lp["norm_mlp"], cfg.norm_eps)
+        h = h + L.mlp_forward(lp["mlp"], hn, cfg)
+        return h, None
+
+    if remat:
+        body = L.remat_wrap(body)
+    x, _ = L.layer_scan(body, x, params["encoder"])
+    return x
+
+
+def project_cross_kv(params, enc_out: jnp.ndarray, cfg: ModelConfig
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """enc_out: [B, S_src, d] -> per-decoder-layer cross K/V
+    [Ld, B, S_src, KV, hd]."""
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def body(_, lp):
+        ca = lp["cross_attn"]
+        k = jnp.einsum("bsd,de->bse", enc_out, ca["wk"])
+        v = jnp.einsum("bsd,de->bse", enc_out, ca["wv"])
+        if cfg.attn_qkv_bias:
+            k = k + ca["bk"]
+            v = v + ca["bv"]
+        k = k.reshape(*enc_out.shape[:-1], kv, hd)
+        v = v.reshape(*enc_out.shape[:-1], kv, hd)
+        if cfg.qk_norm:
+            k = L.rms_norm(k, ca["k_norm"], cfg.norm_eps)
+        return None, (k, v)
+
+    _, (ks, vs) = L.layer_scan(body, None, params["decoder"])
+    return ks, vs
+
+
+# ----------------------------------------------------------------------
+# decoder blocks
+# ----------------------------------------------------------------------
+def _cross_attend(lp, h, cross_k, cross_v, cfg):
+    """h: [B, T, d]; cross_k/v: [B, S_src, KV, hd]."""
+    ca = lp["cross_attn"]
+    hn = L.rms_norm(h, lp["norm_cross"], cfg.norm_eps)
+    q = jnp.einsum("btd,de->bte", hn, ca["wq"])
+    if cfg.attn_qkv_bias:
+        q = q + ca["bq"]
+    q = q.reshape(*hn.shape[:-1], cfg.num_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, ca["q_norm"], cfg.norm_eps)
+    attn = L.flash_gqa(q, cross_k, cross_v, causal=False)
+    return h + L.out_project(ca, attn, cfg)
+
+
+def decoder_block_forward(lp, h, positions, cross_k, cross_v, cfg,
+                          *, return_kv: bool = False):
+    hn = L.rms_norm(h, lp["norm_self"], cfg.norm_eps)
+    q, k, v = L.qkv_project(lp["self_attn"], hn, cfg)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    attn = L.flash_gqa(q, k, v, causal=True)
+    h = h + L.out_project(lp["self_attn"], attn, cfg)
+    h = _cross_attend(lp, h, cross_k, cross_v, cfg)
+    hn = L.rms_norm(h, lp["norm_mlp"], cfg.norm_eps)
+    h = h + L.mlp_forward(lp["mlp"], hn, cfg)
+    if return_kv:
+        return h, (k, v)
+    return h
+
+
+def decoder_block_decode(lp, h, cache_k, cache_v, cross_k, cross_v, pos, cfg):
+    hn = L.rms_norm(h, lp["norm_self"], cfg.norm_eps)
+    q, k, v = L.qkv_project(lp["self_attn"], hn, cfg)
+    q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
+    cache_k = L.cache_write(cache_k, k, pos)
+    cache_v = L.cache_write(cache_v, v, pos)
+    attn = L.cached_attention(q, cache_k, cache_v, pos)
+    h = h + L.out_project(lp["self_attn"], attn, cfg)
+    h = _cross_attend(lp, h, cross_k, cross_v, cfg)
+    hn = L.rms_norm(h, lp["norm_mlp"], cfg.norm_eps)
+    h = h + L.mlp_forward(lp["mlp"], hn, cfg)
+    return h, cache_k, cache_v
+
+
+# ----------------------------------------------------------------------
+# model-level entry points
+# ----------------------------------------------------------------------
+def forward(params, batch_or_tokens, cfg: ModelConfig, remat: bool = False,
+            src_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Training forward. Accepts {"src_embeds", "tokens"} dict or
+    (tokens, src_embeds=...). Returns decoder logits [B, S_tgt, V]."""
+    if isinstance(batch_or_tokens, dict):
+        tokens = batch_or_tokens["tokens"]
+        src_embeds = batch_or_tokens["src_embeds"]
+    else:
+        tokens = batch_or_tokens
+    enc_out = encode(params, src_embeds, cfg, remat=remat)
+    cross_k, cross_v = project_cross_kv(params, enc_out, cfg)
+
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        return decoder_block_forward(lp, h, positions, ck, cv, cfg), None
+
+    if remat:
+        body = L.remat_wrap(body)
+    x, _ = L.layer_scan(body, x, (params["decoder"], cross_k, cross_v))
+    return L.lm_logits(params["embed"], x, cfg)
+
+
+def prefill(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            s_max: Optional[int] = None) -> Tuple[jnp.ndarray, EncDecState]:
+    """batch: {"src_embeds": [B,S_src,fd], "tokens": [B,S_prefix]}."""
+    src_embeds, tokens = batch["src_embeds"], batch["tokens"]
+    enc_out = encode(params, src_embeds, cfg)
+    cross_k, cross_v = project_cross_kv(params, enc_out, cfg)
+
+    B, S = tokens.shape
+    s_max = s_max or S
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        h, (k, v) = decoder_block_forward(lp, h, positions, ck, cv, cfg,
+                                          return_kv=True)
+        return h, (k, v)
+
+    x, (ks, vs) = L.layer_scan(body, x, (params["decoder"], cross_k, cross_v))
+    if s_max > S:
+        pad = [(0, 0), (0, 0), (0, s_max - S), (0, 0), (0, 0)]
+        ks = jnp.pad(ks, pad)
+        vs = jnp.pad(vs, pad)
+    logits = L.lm_logits(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, EncDecState(self_k=ks, self_v=vs,
+                               cross_k=cross_k, cross_v=cross_v)
+
+
+def decode_step(params, tokens: jnp.ndarray, state: EncDecState,
+                pos: jnp.ndarray, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, EncDecState]:
+    x = L.embed(params["embed"], tokens[:, None], cfg)
+
+    def body(h, xs):
+        lp, ck, cv, crk, crv = xs
+        h, ck, cv = decoder_block_decode(lp, h, ck, cv, crk, crv, pos, cfg)
+        return h, (ck, cv)
+
+    x, (ks, vs) = L.layer_scan(
+        body, x, (params["decoder"], state.self_k, state.self_v,
+                  state.cross_k, state.cross_v))
+    logits = L.lm_logits(params["embed"], x, cfg)[:, 0]
+    return logits, EncDecState(self_k=ks, self_v=vs,
+                               cross_k=state.cross_k, cross_v=state.cross_v)
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            remat: bool = True):
+    logits = forward(params, batch, cfg, remat=remat)
+    return TF.cross_entropy(logits, batch["targets"], batch.get("mask")), {}

@@ -1,0 +1,352 @@
+"""Common model building blocks (pure JAX, functional, pytree params).
+
+Conventions:
+  * params are nested dicts of jnp arrays; layer-stacked params carry a
+    leading [L] axis and are consumed by jax.lax.scan (MaxText-style).
+  * activations flow in ``cfg.compute_dtype``; norms/softmax/logits in f32.
+  * attention math routes through ``repro.kernels.ops`` so the Pallas TPU
+    kernels and the jnp references share one call site.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+# ----------------------------------------------------------------------
+# Layer-scan unrolling. Default: rolled lax.scan (small HLO, fast compile).
+# The roofline analysis sets full unrolling because XLA's cost_analysis
+# counts a while-loop body ONCE, not times trip-count — rolled-scan FLOPs
+# would understate the model by ~num_layers x.
+# ----------------------------------------------------------------------
+_SCAN_UNROLL = 1
+
+
+def set_scan_unroll(unroll) -> None:
+    """1 = rolled loop; True = fully unrolled (accurate cost_analysis)."""
+    global _SCAN_UNROLL
+    _SCAN_UNROLL = unroll
+
+
+def layer_scan(body, init, xs, **kw):
+    return jax.lax.scan(body, init, xs, unroll=_SCAN_UNROLL, **kw)
+
+
+def remat_wrap(body):
+    """Activation-checkpoint a layer body. With the ``remat_dots`` perf
+    flag, matmul outputs are saved instead of recomputed (XLA's
+    dots-saveable policy) — backward recompute then redoes only cheap
+    elementwise work, cutting both recompute FLOPs and HBM traffic."""
+    from repro.dist import opt_flags
+    policy = None
+    if opt_flags.enabled("remat_dots"):
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(body, prevent_cse=False, policy=policy)
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def flash_gqa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: int = 0,
+              tp: int = 16) -> jnp.ndarray:
+    """Full-sequence GQA attention with optional exact head regrouping.
+
+    With the ``pad_heads`` perf flag and H % tp != 0 (yi-34b: 56, qwen2:
+    14), queries are regrouped so the head dim divides the model axis:
+    each kv head is DUPLICATED tp/KV times, and its G query heads are
+    redistributed over the duplicates (zero-padded to equal group size).
+    Zero q rows attend uniformly but their outputs are sliced away —
+    bit-exact, and the pair tensors now shard tp-way instead of
+    replicating across 'model'.
+    """
+    from repro.dist import opt_flags
+    from repro.kernels import ops
+
+    def _constrain_heads(*tensors):
+        """head dim -> 'model' when divisible; everything else free."""
+        if not opt_flags.enabled("head_shard_attn"):
+            return tensors
+        from jax.sharding import PartitionSpec as P
+        out = []
+        for t in tensors:
+            if t.shape[2] % tp == 0:
+                spec = P(*([P.UNCONSTRAINED] * 2 + ["model"]
+                           + [P.UNCONSTRAINED] * (t.ndim - 3)))
+                try:
+                    t = jax.lax.with_sharding_constraint(t, spec)
+                except Exception:
+                    pass   # no mesh in scope (plain CPU tests)
+            out.append(t)
+        return tuple(out)
+
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if (not opt_flags.enabled("pad_heads") or H % tp == 0
+            or tp % KV != 0 or KV >= tp):
+        q, k, v = _constrain_heads(q, k, v)
+        return ops.flash_attention(q, k, v, causal=causal, window=window)
+
+    dup = tp // KV
+    Gp = -(-G // dup)                     # q heads per duplicated kv head
+    pad = dup * Gp - G
+    qg = q.reshape(B, S, KV, G, hd)
+    qg = jnp.pad(qg, [(0, 0), (0, 0), (0, 0), (0, pad), (0, 0)])
+    # [B,S,KV,dup,Gp,hd] -> heads (KV*dup) * Gp, kv-major like GQA expects
+    qg = qg.reshape(B, S, KV, dup, Gp, hd).reshape(B, S, KV * dup * Gp, hd)
+    kd = jnp.repeat(k, dup, axis=2)
+    vd = jnp.repeat(v, dup, axis=2)
+    qg, kd, vd = _constrain_heads(qg, kd, vd)
+    out = ops.flash_attention(qg, kd, vd, causal=causal, window=window)
+    out = out.reshape(B, S, KV, dup * Gp, hd)[:, :, :, :G]
+    return out.reshape(B, S, H, hd)
+
+
+def cache_write(cache: jnp.ndarray, new: jnp.ndarray,
+                pos: jnp.ndarray) -> jnp.ndarray:
+    """Write one token's K or V into a [B, S, KV, hd] cache at per-batch
+    position ``pos``. Default: per-batch dynamic_update_slice (a scatter).
+    With ``masked_cache_update``, an elementwise select over the sequence
+    dim — identical result, but it partitions cleanly when the cache is
+    sharded (the scatter triggers SPMD full-rematerialization copies)."""
+    from repro.dist import opt_flags
+    if opt_flags.enabled("masked_cache_update"):
+        idx = jnp.arange(cache.shape[1])[None, :, None, None]
+        sel = idx == pos[:, None, None, None]
+        return jnp.where(sel, new.astype(cache.dtype), cache)
+    return jax.vmap(lambda c, x, i: jax.lax.dynamic_update_slice(
+        c, x, (i, 0, 0)))(cache, new.astype(cache.dtype), pos)
+
+
+# ----------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_rms_norm(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype=dtype)
+
+
+# ----------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    freqs = rope_frequencies(x.shape[-1], theta)           # [half]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., :, None, :]                 # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Attention (GQA with optional qk-norm / biases / sliding window)
+# ----------------------------------------------------------------------
+def init_attention(rng, cfg: ModelConfig, d_model: Optional[int] = None,
+                   cross: bool = False) -> Params:
+    d = d_model or cfg.d_model
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pdt = dtype_of(cfg.param_dtype)
+    k = jax.random.split(rng, 4)
+    std = 0.02
+    out_std = std / np.sqrt(2 * cfg.num_layers)
+    p: Params = {
+        "wq": (jax.random.normal(k[0], (d, h * hd)) * std).astype(pdt),
+        "wk": (jax.random.normal(k[1], (d, kv * hd)) * std).astype(pdt),
+        "wv": (jax.random.normal(k[2], (d, kv * hd)) * std).astype(pdt),
+        "wo": (jax.random.normal(k[3], (h * hd, d)) * out_std).astype(pdt),
+    }
+    if cfg.attn_qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), pdt)
+        p["bk"] = jnp.zeros((kv * hd,), pdt)
+        p["bv"] = jnp.zeros((kv * hd,), pdt)
+    if cfg.attn_out_bias:
+        p["bo"] = jnp.zeros((d,), pdt)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(hd, pdt)
+        p["k_norm"] = init_rms_norm(hd, pdt)
+    if cross:
+        p.pop("wq")  # cross-attn reuses q projection; keep separate k/v
+        p["wq"] = (jax.random.normal(k[0], (d, h * hd)) * std).astype(pdt)
+    return p
+
+
+def qkv_project(p: Params, x: jnp.ndarray, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, d] -> q [B,S,H,hd], k/v [B,S,KV,hd]."""
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if cfg.attn_qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(*x.shape[:-1], h, hd)
+    k = k.reshape(*x.shape[:-1], kv, hd)
+    v = v.reshape(*x.shape[:-1], kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def out_project(p: Params, attn: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """attn: [B, S, H, hd] -> [B, S, d]."""
+    o = jnp.einsum("bsf,fd->bsd", attn.reshape(*attn.shape[:-2], -1), p["wo"])
+    if cfg.attn_out_bias:
+        o = o + p["bo"]
+    return o
+
+
+def attention_scores(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Reference full-matrix attention. q [B,S,H,hd]; k,v [B,T,KV,hd].
+
+    GQA: H = G * KV; computed grouped to avoid materializing repeated K/V.
+    Used for training forward and small-scale serving; the Pallas flash /
+    paged kernels are the TPU fast path (see repro.kernels).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def cached_attention(q: jnp.ndarray, cache_k: jnp.ndarray,
+                     cache_v: jnp.ndarray, pos: jnp.ndarray,
+                     window: int = 0) -> jnp.ndarray:
+    """Decode-step attention against a dense KV cache.
+
+    q: [B, 1, H, hd] (the new token's query, already rotated);
+    cache_k/v: [B, T, KV, hd] (new K/V already written at ``pos``);
+    pos: [B] per-sequence position of the new token.
+    Reads the whole cache and masks positions > pos — the dense-cache
+    analogue of the paged kernel (which skips unused pages instead).
+    """
+    B, _, H, hd = q.shape
+    T, KV = cache_k.shape[1], cache_k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg,
+                        cache_k.astype(jnp.float32)) / np.sqrt(hd)
+    kpos = jnp.arange(T)[None, :]
+    mask = kpos <= pos[:, None]
+    if window > 0:
+        mask = mask & (kpos > (pos[:, None] - window))
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs,
+                     cache_v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def causal_mask(S: int, T: int, offset: int = 0,
+                window: int = 0) -> jnp.ndarray:
+    """[1, S, T] True where query i may attend key j."""
+    qpos = jnp.arange(S)[:, None] + offset
+    kpos = jnp.arange(T)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m = m & (kpos > qpos - window)
+    return m[None]
+
+
+# ----------------------------------------------------------------------
+# FFN (SwiGLU / GELU)
+# ----------------------------------------------------------------------
+def init_mlp(rng, cfg: ModelConfig, d_ff: Optional[int] = None,
+             d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    pdt = dtype_of(cfg.param_dtype)
+    k = jax.random.split(rng, 3)
+    std = 0.02
+    out_std = std / np.sqrt(2 * cfg.num_layers)
+    p: Params = {
+        "w_up": (jax.random.normal(k[1], (d, f)) * std).astype(pdt),
+        "w_down": (jax.random.normal(k[2], (f, d)) * out_std).astype(pdt),
+    }
+    if cfg.act == "silu":
+        p["w_gate"] = (jax.random.normal(k[0], (d, f)) * std).astype(pdt)
+    if cfg.mlp_bias:
+        p["b_up"] = jnp.zeros((f,), pdt)
+        p["b_down"] = jnp.zeros((d,), pdt)
+    return p
+
+
+def mlp_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if cfg.mlp_bias:
+        up = up + p["b_up"]
+    if cfg.act == "silu":
+        gate = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        hidden = jax.nn.silu(gate) * up
+    else:
+        hidden = jax.nn.gelu(up)
+    out = jnp.einsum("...f,fd->...d", hidden, p["w_down"])
+    if cfg.mlp_bias:
+        out = out + p["b_down"]
+    return out
+
+
+# ----------------------------------------------------------------------
+# Embedding / LM head
+# ----------------------------------------------------------------------
+def init_embedding(rng, cfg: ModelConfig) -> Params:
+    pdt = dtype_of(cfg.param_dtype)
+    k1, k2 = jax.random.split(rng)
+    p: Params = {
+        "embedding": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model))
+                      * 0.02).astype(pdt),
+        "final_norm": init_rms_norm(cfg.d_model, pdt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(k2, (cfg.d_model, cfg.vocab_size))
+                        * 0.02).astype(pdt)
+    return p
+
+
+def embed(p: Params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    return p["embedding"].astype(dtype_of(cfg.compute_dtype))[tokens]
+
+
+def lm_logits(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    from repro.dist import opt_flags
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    w = (p["embedding"].T if cfg.tie_embeddings else p["lm_head"])
+    if opt_flags.enabled("bf16_logits"):
+        # keep the head matmul + logits tensor in bf16 (softmax/loss still
+        # upcast): halves the largest single activation in the graph
+        return jnp.einsum("...d,dv->...v", x, w)
+    return jnp.einsum("...d,dv->...v", x.astype(jnp.float32),
+                      w.astype(jnp.float32))

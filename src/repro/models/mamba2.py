@@ -1,0 +1,349 @@
+"""Mamba2 blocks + the Zamba2 hybrid model (zamba2-2.7b).
+
+Zamba2 = a backbone of Mamba2 blocks with ONE weight-tied ("shared") full
+attention block invoked every ``hybrid.shared_attn_every`` layers. The
+serving handoff state is therefore mixed (DESIGN.md section 8):
+
+  conv   [L, B, cw-1, conv_dim]    causal-conv tail (fixed size)
+  ssm    [L, B, NH, N, P]          SSD recurrence state (fixed size)
+  attn   [G, B, S_cache, KV, hd]   KV cache of the G shared-block calls
+                                   (the only per-token-growing part)
+
+At 500k context the shared block runs with a sliding window
+(``hybrid.long_context_window``) and its cache becomes a fixed-size ring —
+that is what makes zamba2 a ``long_500k``-capable arch.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from . import layers as L
+from . import transformer as TF
+
+
+class ZambaState(NamedTuple):
+    conv: jnp.ndarray     # [L, B, cw-1, conv_dim]
+    ssm: jnp.ndarray      # [L, B, NH, N, P] f32
+    attn_k: jnp.ndarray   # [G, B, S_cache, KV, hd]
+    attn_v: jnp.ndarray   # [G, B, S_cache, KV, hd]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.state_dim
+    return d_in, nh, conv_dim, s.state_dim
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+def init_mamba_block(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, conv_dim, N = _dims(cfg)
+    pdt = L.dtype_of(cfg.param_dtype)
+    k = jax.random.split(rng, 4)
+    std = 0.02
+    out_std = std / math.sqrt(2 * cfg.num_layers)
+    # in_proj emits [z(d_in), x(d_in), B(N), C(N), dt(nh)]
+    return {
+        "in_proj": (jax.random.normal(k[0], (d, 2 * d_in + 2 * N + nh))
+                    * std).astype(pdt),
+        "conv_w": (jax.random.normal(k[1], (s.conv_width, conv_dim))
+                   * (1.0 / math.sqrt(s.conv_width))).astype(pdt),
+        "out_proj": (jax.random.normal(k[2], (d_in, d)) * out_std).astype(pdt),
+        "gate_norm": jnp.ones((d_in,), pdt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": (jax.random.uniform(k[3], (nh,), minval=-4.0, maxval=-1.0)
+                    ).astype(jnp.float32),
+        "norm": L.init_rms_norm(d, pdt),
+    }
+
+
+def init(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    k_emb, k_layers, k_attn = jax.random.split(rng, 3)
+    keys = jax.random.split(k_layers, cfg.num_layers)
+    pdt = L.dtype_of(cfg.param_dtype)
+    return {
+        "embed": L.init_embedding(k_emb, cfg),
+        "mamba_layers": jax.vmap(lambda k: init_mamba_block(k, cfg))(keys),
+        "shared_attn": {
+            "attn": L.init_attention(k_attn, cfg),
+            "norm": L.init_rms_norm(cfg.d_model, pdt),
+        },
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16, window: int = 0) -> ZambaState:
+    s = cfg.ssm
+    d_in, nh, conv_dim, N = _dims(cfg)
+    G = cfg.num_layers // cfg.hybrid.shared_attn_every
+    s_cache = min(window, s_max) if window else s_max
+    return ZambaState(
+        conv=jnp.zeros((cfg.num_layers, batch, s.conv_width - 1, conv_dim),
+                       dtype),
+        ssm=jnp.zeros((cfg.num_layers, batch, nh, N, s.head_dim),
+                      jnp.float32),
+        attn_k=jnp.zeros((G, batch, s_cache, cfg.num_kv_heads, cfg.head_dim),
+                         dtype),
+        attn_v=jnp.zeros((G, batch, s_cache, cfg.num_kv_heads, cfg.head_dim),
+                         dtype),
+    )
+
+
+# ----------------------------------------------------------------------
+# Mamba2 block (sequence form)
+# ----------------------------------------------------------------------
+def mamba_seq(p, x: jnp.ndarray, cfg: ModelConfig,
+              conv_state: Optional[jnp.ndarray] = None,
+              ssm_state: Optional[jnp.ndarray] = None):
+    """x: [B, T, d] -> (out [B, T, d], (new_conv_state, new_ssm_state))."""
+    s = cfg.ssm
+    B, T, d = x.shape
+    d_in, nh, conv_dim, N = _dims(cfg)
+
+    proj = x @ p["in_proj"]                                    # [B,T,...]
+    z, xc, Bm, Cm, dt_raw = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+
+    # depthwise causal conv over [xc|B|C]
+    xbc = jnp.concatenate([xc, Bm, Cm], axis=-1)               # [B,T,conv_dim]
+    cw = s.conv_width
+    if conv_state is None:
+        tail = jnp.zeros((B, cw - 1, conv_dim), xbc.dtype)
+    else:
+        tail = conv_state.astype(xbc.dtype)
+    padded = jnp.concatenate([tail, xbc], axis=1)              # [B,T+cw-1,...]
+    w = p["conv_w"].astype(jnp.float32)
+    conv = sum(padded[:, i:i + T].astype(jnp.float32) * w[i]
+               for i in range(cw))
+    conv = jax.nn.silu(conv).astype(xbc.dtype)
+    new_conv_state = padded[:, -(cw - 1):] if cw > 1 else tail
+
+    xc, Bm, Cm = jnp.split(conv, [d_in, d_in + N], axis=-1)
+    xh = xc.reshape(B, T, nh, s.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,T,nh]
+    A = -jnp.exp(p["A_log"])
+
+    y, new_ssm = ops.mamba2(xh, dt, A, Bm, Cm, p["D"], ssm_state,
+                            chunk=s.chunk_size)
+    y = y.reshape(B, T, d_in)
+
+    # gated RMSNorm (Mamba2's norm-before-out_proj with silu(z) gate)
+    y = y * jax.nn.silu(z)
+    y = L.rms_norm(y, p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], (new_conv_state, new_ssm)
+
+
+def mamba_step(p, x: jnp.ndarray, cfg: ModelConfig,
+               conv_state: jnp.ndarray, ssm_state: jnp.ndarray):
+    """x: [B, d] single token -> (out [B, d], new states)."""
+    s = cfg.ssm
+    B, d = x.shape
+    d_in, nh, conv_dim, N = _dims(cfg)
+
+    proj = x @ p["in_proj"]
+    z, xc, Bm, Cm, dt_raw = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    xbc = jnp.concatenate([xc, Bm, Cm], axis=-1)               # [B, conv_dim]
+
+    w = p["conv_w"].astype(jnp.float32)
+    window = jnp.concatenate(
+        [conv_state.astype(jnp.float32), xbc.astype(jnp.float32)[:, None]],
+        axis=1)                                                # [B, cw, cd]
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w)).astype(x.dtype)
+    new_conv_state = window[:, 1:].astype(conv_state.dtype)
+
+    xc, Bm, Cm = jnp.split(conv, [d_in, d_in + N], axis=-1)
+    xh = xc.reshape(B, nh, s.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,nh]
+    A = -jnp.exp(p["A_log"])
+    y, new_ssm = ops.mamba2_step(xh, dt, A, Bm, Cm, p["D"], ssm_state)
+    y = y.reshape(B, d_in)
+    y = y * jax.nn.silu(z)
+    y = L.rms_norm(y, p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], (new_conv_state, new_ssm)
+
+
+# ----------------------------------------------------------------------
+# shared attention block
+# ----------------------------------------------------------------------
+def shared_attn_seq(p, x: jnp.ndarray, positions: jnp.ndarray,
+                    cfg: ModelConfig, window: int, *,
+                    return_kv: bool = False):
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    attn = L.flash_gqa(q, k, v, causal=True, window=window)
+    out = x + L.out_project(p["attn"], attn, cfg)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _ring_write(cache: jnp.ndarray, val: jnp.ndarray, pos: jnp.ndarray,
+                ring: bool) -> jnp.ndarray:
+    """cache: [B, S_cache, KV, hd]; val: [B, 1, KV, hd]; pos: [B]."""
+    slot = pos % cache.shape[1] if ring else pos
+    return jax.vmap(lambda c, x, i: jax.lax.dynamic_update_slice(
+        c, x, (i, 0, 0)))(cache, val.astype(cache.dtype), slot)
+
+
+def shared_attn_step(p, x: jnp.ndarray, cache_k, cache_v, pos, cfg,
+                     window: int):
+    """x: [B, 1, d]. Ring cache when window>0 (cache size == window)."""
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg)
+    q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
+    ring = window > 0 and cache_k.shape[1] == window
+    cache_k = _ring_write(cache_k, k, pos, ring)
+    cache_v = _ring_write(cache_v, v, pos, ring)
+    if ring:
+        # every resident slot is within the window by construction
+        B, _, H, hd = q.shape
+        S_c = cache_k.shape[1]
+        KV = cache_k.shape[2]
+        G = H // KV
+        qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+        logits = jnp.einsum("bkgd,btkd->bkgt", qg,
+                            cache_k.astype(jnp.float32)) / math.sqrt(hd)
+        valid = jnp.arange(S_c)[None] <= pos[:, None]
+        logits = jnp.where(valid[:, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("bkgt,btkd->bkgd", probs,
+                          cache_v.astype(jnp.float32))
+        attn = attn.reshape(B, 1, H, hd).astype(q.dtype)
+    else:
+        attn = L.cached_attention(q, cache_k, cache_v, pos, window=window)
+    out = x + L.out_project(p["attn"], attn, cfg)
+    return out, cache_k, cache_v
+
+
+# ----------------------------------------------------------------------
+# model-level entry points
+# ----------------------------------------------------------------------
+def _group_params(params, cfg: ModelConfig):
+    """Reshape stacked mamba layer params [L, ...] -> [G, every, ...]."""
+    every = cfg.hybrid.shared_attn_every
+    G = cfg.num_layers // every
+    return jax.tree.map(
+        lambda x: x.reshape(G, every, *x.shape[1:]), params["mamba_layers"]), G
+
+
+def forward(params, tokens: jnp.ndarray, cfg: ModelConfig,
+            remat: bool = False, window: int = 0) -> jnp.ndarray:
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    grouped, G = _group_params(params, cfg)
+    shared = params["shared_attn"]
+
+    def group_body(h, group_lp):
+        h = shared_attn_seq(shared, h, positions, cfg, window)
+
+        def mamba_body(hh, lp):
+            out, _ = mamba_seq(lp, hh, cfg)
+            return hh + out, None
+
+        h, _ = L.layer_scan(mamba_body, h, group_lp)
+        return h, None
+
+    if remat:
+        group_body = L.remat_wrap(group_body)
+    x, _ = L.layer_scan(group_body, x, grouped)
+    return L.lm_logits(params["embed"], x, cfg)
+
+
+def prefill(params, tokens: jnp.ndarray, cfg: ModelConfig,
+            s_max: Optional[int] = None, window: int = 0
+            ) -> Tuple[jnp.ndarray, ZambaState]:
+    B, S = tokens.shape
+    s_max = s_max or S
+    s_cache = min(window, s_max) if window else s_max
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    grouped, G = _group_params(params, cfg)
+    shared = params["shared_attn"]
+
+    def group_body(h, group_lp):
+        h, (k, v) = shared_attn_seq(shared, h, positions, cfg, window,
+                                    return_kv=True)
+
+        def mamba_body(hh, lp):
+            out, (cs, ss) = mamba_seq(lp, hh, cfg)
+            return hh + out, (cs, ss)
+
+        h, (conv_s, ssm_s) = L.layer_scan(mamba_body, h, group_lp)
+        return h, (k, v, conv_s, ssm_s)
+
+    x, (ks, vs, conv_s, ssm_s) = L.layer_scan(group_body, x, grouped)
+    # ks/vs: [G, B, S, KV, hd]; conv_s/ssm_s: [G, every, B, ...] -> [L, B, ...]
+    conv_s = conv_s.reshape(cfg.num_layers, *conv_s.shape[2:])
+    ssm_s = ssm_s.reshape(cfg.num_layers, *ssm_s.shape[2:])
+
+    if window and S > s_cache:
+        # keep the last `window` tokens at their ring slots
+        keep = jnp.arange(S - s_cache, S)
+        slots = keep % s_cache
+        ks_r = jnp.zeros((G, B, s_cache, *ks.shape[3:]), ks.dtype)
+        ks_r = ks_r.at[:, :, slots].set(ks[:, :, keep])
+        vs_r = jnp.zeros_like(ks_r)
+        vs_r = vs_r.at[:, :, slots].set(vs[:, :, keep])
+        ks, vs = ks_r, vs_r
+    elif s_cache > S:
+        pad = [(0, 0), (0, 0), (0, s_cache - S), (0, 0), (0, 0)]
+        ks = jnp.pad(ks, pad)
+        vs = jnp.pad(vs, pad)
+
+    logits = L.lm_logits(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, ZambaState(conv=conv_s, ssm=ssm_s, attn_k=ks, attn_v=vs)
+
+
+def decode_step(params, tokens: jnp.ndarray, state: ZambaState,
+                pos: jnp.ndarray, cfg: ModelConfig, window: int = 0
+                ) -> Tuple[jnp.ndarray, ZambaState]:
+    x = L.embed(params["embed"], tokens[:, None], cfg)
+    grouped, G = _group_params(params, cfg)
+    shared = params["shared_attn"]
+    every = cfg.hybrid.shared_attn_every
+    conv = state.conv.reshape(G, every, *state.conv.shape[1:])
+    ssm = state.ssm.reshape(G, every, *state.ssm.shape[1:])
+
+    def group_body(h, xs):
+        group_lp, ck, cv, conv_g, ssm_g = xs
+        h, ck, cv = shared_attn_step(shared, h, ck, cv, pos, cfg, window)
+
+        def mamba_body(hh, inner):
+            lp, cs, ss = inner
+            out, (cs, ss) = mamba_step(lp, hh[:, 0], cfg, cs, ss)
+            return hh + out[:, None], (cs, ss)
+
+        h, (conv_g, ssm_g) = L.layer_scan(mamba_body, h,
+                                          (group_lp, conv_g, ssm_g))
+        return h, (ck, cv, conv_g, ssm_g)
+
+    x, (ks, vs, conv, ssm) = L.layer_scan(
+        group_body, x, (grouped, state.attn_k, state.attn_v, conv, ssm))
+    logits = L.lm_logits(params["embed"], x, cfg)[:, 0]
+    return logits, ZambaState(
+        conv=conv.reshape(cfg.num_layers, *conv.shape[2:]),
+        ssm=ssm.reshape(cfg.num_layers, *ssm.shape[2:]),
+        attn_k=ks, attn_v=vs)
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            remat: bool = True):
+    logits = forward(params, batch["tokens"], cfg, remat=remat)
+    return TF.cross_entropy(logits, batch["targets"], batch.get("mask")), {}

@@ -1,0 +1,336 @@
+"""Mixture-of-experts transformer (deepseek-moe-16b, moonshot-v1-16b-a3b).
+
+Attention is the same dense GQA as ``transformer.py``; the FFN of layers
+``>= first_k_dense`` is a fine-grained MoE: ``num_experts`` routed experts of
+width ``d_expert`` with top-k token choice, plus ``num_shared_experts``
+always-on shared experts fused into one dense SwiGLU.
+
+Dispatch is **sort-based with capacity** (not the GShard one-hot-einsum form,
+whose [T, E, C] dispatch tensor is O(T^2) at training token counts):
+
+  1. router top-k -> (expert_idx, weight) per token-slot, T*K slots
+  2. argsort slots by expert id; rank-within-expert via the sorted-run trick
+  3. scatter kept slots into an [E, C, d] buffer          (the all-to-all)
+  4. batched per-expert SwiGLU einsum [E,C,d]x[E,d,f]     (EP-sharded on E)
+  5. gather back + weighted combine                        (the return a2a)
+
+Slots past capacity C = ceil(T*K/E * capacity_factor) are dropped (their
+combine weight contributes nothing), matching standard capacity semantics.
+With experts sharded on the ``model/expert`` mesh axes, step 3/5's scatter
+and gather lower to the expert-parallel all-to-all exchange.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from . import layers as L
+from . import transformer as TF
+
+AttnCache = TF.AttnCache
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+def init_moe_ffn(rng, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_expert, m.num_experts
+    pdt = L.dtype_of(cfg.param_dtype)
+    k = jax.random.split(rng, 5)
+    std = 0.02
+    out_std = std / math.sqrt(2 * cfg.num_layers)
+    p = {
+        "router": (jax.random.normal(k[0], (d, E)) * std).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k[1], (E, d, f)) * std).astype(pdt),
+        "w_up": (jax.random.normal(k[2], (E, d, f)) * std).astype(pdt),
+        "w_down": (jax.random.normal(k[3], (E, f, d)) * out_std).astype(pdt),
+    }
+    if m.num_shared_experts:
+        fs = m.num_shared_experts * f
+        ks = jax.random.split(k[4], 3)
+        p["shared"] = {
+            "w_gate": (jax.random.normal(ks[0], (d, fs)) * std).astype(pdt),
+            "w_up": (jax.random.normal(ks[1], (d, fs)) * std).astype(pdt),
+            "w_down": (jax.random.normal(ks[2], (fs, d)) * out_std).astype(pdt),
+        }
+    return p
+
+
+def init_block(rng, cfg: ModelConfig, dense: bool) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(rng)
+    pdt = L.dtype_of(cfg.param_dtype)
+    ffn = (L.init_mlp(k2, cfg, d_ff=cfg.moe.dense_d_ff) if dense
+           else init_moe_ffn(k2, cfg))
+    return {
+        "attn": L.init_attention(k1, cfg),
+        "ffn": ffn,
+        "norm_attn": L.init_rms_norm(cfg.d_model, pdt),
+        "norm_mlp": L.init_rms_norm(cfg.d_model, pdt),
+    }
+
+
+def init(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    m = cfg.moe
+    k_emb, k_dense, k_moe = jax.random.split(rng, 3)
+    n_dense = m.first_k_dense
+    n_moe = cfg.num_layers - n_dense
+    params: Dict[str, Any] = {"embed": L.init_embedding(k_emb, cfg)}
+    if n_dense:
+        keys = jax.random.split(k_dense, n_dense)
+        params["dense_layers"] = jax.vmap(
+            lambda k: init_block(k, cfg, dense=True))(keys)
+    keys = jax.random.split(k_moe, n_moe)
+    params["moe_layers"] = jax.vmap(
+        lambda k: init_block(k, cfg, dense=False))(keys)
+    return params
+
+
+# ----------------------------------------------------------------------
+# routed expert dispatch (sort + scatter, capacity-bounded)
+# ----------------------------------------------------------------------
+def moe_ffn(p: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig,
+            dropless: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [..., d] -> (y [..., d], aux_loss scalar).
+
+    ``dropless=True`` (decode) sizes capacity at min(T*K, ceil(T*K/E *
+    decode_capacity_factor)): exact for small batches (T*K <= C covers the
+    all-to-one-expert worst case), and statistically-dropless-but-bounded
+    for large decode batches — a dropped decode token is a wrong token, but
+    a worst-case C = T*K buffer is 64x overcompute at E=64.
+    Train/prefill use the standard capacity factor (drops allowed).
+    """
+    from repro.dist import opt_flags
+    m = cfg.moe
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+    T = xt.shape[0]
+
+    # local_moe_dispatch perf flag: sort/rank/scatter per data-shard-sized
+    # token group (vmapped -> shard-local in the partitioned program)
+    # instead of one global sort over the sharded token axis; only the
+    # expert einsum crosses shards (the true MoE all-to-all).
+    groups = 1
+    if opt_flags.enabled("local_moe_dispatch"):
+        for g in (16, 8, 4, 2):
+            if T % g == 0 and T // g >= m.num_experts:
+                groups = g
+                break
+    if groups > 1:
+        xg = xt.reshape(groups, T // groups, d)
+        y, aux = jax.vmap(
+            lambda xs: _dispatch(p, xs, cfg, dropless))(xg)
+        y = y.reshape(T, d)
+        aux = jnp.mean(aux)
+    else:
+        y, aux = _dispatch(p, xt, cfg, dropless)
+
+    if m.num_shared_experts:
+        s = p["shared"]
+        sg = jnp.einsum("td,df->tf", xt, s["w_gate"])
+        su = jnp.einsum("td,df->tf", xt, s["w_up"])
+        y = y + jnp.einsum("tf,fd->td", jax.nn.silu(sg) * su, s["w_down"])
+
+    return y.reshape(*lead, d).astype(x.dtype), aux
+
+
+def _dispatch(p, xt: jnp.ndarray, cfg: ModelConfig,
+              dropless: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Core sort+scatter dispatch over one token group. xt: [T, d]."""
+    m = cfg.moe
+    E, K = m.num_experts, m.top_k
+    T, d = xt.shape
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # [T, E]
+    weight, idx = jax.lax.top_k(probs, K)                       # [T, K]
+    weight = weight / jnp.maximum(
+        jnp.sum(weight, axis=-1, keepdims=True), 1e-9)          # renormalize
+
+    # --- load-balance auxiliary loss (Switch form: E * sum f_e * P_e) ---
+    counts = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    frac_tokens = counts / (T * K)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs) * m.router_aux_loss
+
+    # --- sort slots by expert; rank within expert run ---
+    S = T * K
+    flat_e = idx.reshape(S)                                     # slot->expert
+    flat_t = jnp.repeat(jnp.arange(T), K)                       # slot->token
+    flat_w = weight.reshape(S)
+    order = jnp.argsort(flat_e)                                 # stable
+    se = flat_e[order]
+    # rank within equal-expert run: position - index of run start
+    run_start = jnp.searchsorted(se, se, side="left")
+    rank = jnp.arange(S) - run_start                            # [S]
+
+    if dropless:
+        C = min(S, max(int(math.ceil(S / E * m.decode_capacity_factor)), 1))
+    else:
+        C = max(int(math.ceil(S / E * m.capacity_factor)), 1)
+    keep = rank < C
+    # scatter destinations in the [E*C] buffer; dropped slots -> E*C (oob)
+    dest = jnp.where(keep, se * C + rank, E * C)
+
+    xe = jnp.zeros((E * C, d), xt.dtype).at[dest].set(
+        xt[flat_t[order]], mode="drop")
+    xe = xe.reshape(E, C, d)
+
+    # --- batched per-expert SwiGLU ---
+    gate = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    h = jax.nn.silu(gate) * up
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * C, d)
+
+    # --- gather back + weighted combine ---
+    back = jnp.where(keep[:, None], ye[jnp.minimum(dest, E * C - 1)], 0.0)
+    contrib = back * flat_w[order][:, None].astype(back.dtype)
+    y = jnp.zeros((T, d), back.dtype).at[flat_t[order]].add(contrib)
+    return y, aux
+
+
+# ----------------------------------------------------------------------
+# blocks
+# ----------------------------------------------------------------------
+def block_forward(p, x, positions, cfg: ModelConfig, dense: bool, *,
+                  return_kv: bool = False):
+    h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    attn = L.flash_gqa(q, k, v, causal=True, window=cfg.sliding_window)
+    x = x + L.out_project(p["attn"], attn, cfg)
+    h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+    if dense:
+        ffn, aux = L.mlp_forward(p["ffn"], h, cfg), jnp.zeros((), jnp.float32)
+    else:
+        ffn, aux = moe_ffn(p["ffn"], h, cfg)
+    x = x + ffn
+    if return_kv:
+        return x, aux, (k, v)
+    return x, aux
+
+
+def block_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig, dense: bool):
+    h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg)
+    q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
+    cache_k = L.cache_write(cache_k, k, pos)
+    cache_v = L.cache_write(cache_v, v, pos)
+    attn = L.cached_attention(q, cache_k, cache_v, pos,
+                              window=cfg.sliding_window)
+    x = x + L.out_project(p["attn"], attn, cfg)
+    h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+    if dense:
+        ffn = L.mlp_forward(p["ffn"], h, cfg)
+    else:
+        ffn, _ = moe_ffn(p["ffn"], h, cfg, dropless=True)
+    x = x + ffn
+    return x, cache_k, cache_v
+
+
+# ----------------------------------------------------------------------
+# model-level entry points (mirror transformer.py's API)
+# ----------------------------------------------------------------------
+def _scan_group(params_group, x, positions, cfg, dense, remat, collect_kv):
+    def body(h, lp):
+        if collect_kv:
+            h, aux, kv = block_forward(lp, h, positions, cfg, dense,
+                                       return_kv=True)
+            return h, (aux, kv)
+        h, aux = block_forward(lp, h, positions, cfg, dense)
+        return h, aux
+    if remat:
+        body = L.remat_wrap(body)
+    return L.layer_scan(body, x, params_group)
+
+
+def forward(params, tokens: jnp.ndarray, cfg: ModelConfig,
+            remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: [B, S] -> (logits [B, S, V], aux_loss)."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    aux_total = jnp.zeros((), jnp.float32)
+    if "dense_layers" in params:
+        x, aux = _scan_group(params["dense_layers"], x, positions, cfg,
+                             True, remat, False)
+        aux_total = aux_total + jnp.sum(aux)
+    x, aux = _scan_group(params["moe_layers"], x, positions, cfg,
+                         False, remat, False)
+    aux_total = aux_total + jnp.sum(aux)
+    return L.lm_logits(params["embed"], x, cfg), aux_total
+
+
+def prefill(params, tokens: jnp.ndarray, cfg: ModelConfig,
+            s_max: Optional[int] = None) -> Tuple[jnp.ndarray, AttnCache]:
+    B, S = tokens.shape
+    s_max = s_max or S
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    all_k, all_v = [], []
+    if "dense_layers" in params:
+        x, (_, (ks, vs)) = _scan_group(params["dense_layers"], x, positions,
+                                       cfg, True, False, True)
+        all_k.append(ks)
+        all_v.append(vs)
+    x, (_, (ks, vs)) = _scan_group(params["moe_layers"], x, positions,
+                                   cfg, False, False, True)
+    all_k.append(ks)
+    all_v.append(vs)
+    ks = jnp.concatenate(all_k, axis=0) if len(all_k) > 1 else all_k[0]
+    vs = jnp.concatenate(all_v, axis=0) if len(all_v) > 1 else all_v[0]
+    if s_max > S:
+        pad = [(0, 0), (0, 0), (0, s_max - S), (0, 0), (0, 0)]
+        ks = jnp.pad(ks, pad)
+        vs = jnp.pad(vs, pad)
+    logits = L.lm_logits(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, AttnCache(k=ks, v=vs)
+
+
+def decode_step(params, tokens: jnp.ndarray, cache: AttnCache,
+                pos: jnp.ndarray, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, AttnCache]:
+    x = L.embed(params["embed"], tokens[:, None], cfg)
+    n_dense = cfg.moe.first_k_dense
+    ck_d, cv_d = cache.k[:n_dense], cache.v[:n_dense]
+    ck_m, cv_m = cache.k[n_dense:], cache.v[n_dense:]
+
+    if n_dense:
+        def body_d(h, xs):
+            lp, ck, cv = xs
+            h, ck, cv = block_decode(lp, h, ck, cv, pos, cfg, True)
+            return h, (ck, cv)
+        x, (ck_d, cv_d) = L.layer_scan(
+            body_d, x, (params["dense_layers"], ck_d, cv_d))
+
+    def body_m(h, xs):
+        lp, ck, cv = xs
+        h, ck, cv = block_decode(lp, h, ck, cv, pos, cfg, False)
+        return h, (ck, cv)
+    x, (ck_m, cv_m) = L.layer_scan(
+        body_m, x, (params["moe_layers"], ck_m, cv_m))
+
+    ks = jnp.concatenate([ck_d, ck_m], axis=0) if n_dense else ck_m
+    vs = jnp.concatenate([cv_d, cv_m], axis=0) if n_dense else cv_m
+    logits = L.lm_logits(params["embed"], x, cfg)[:, 0]
+    return logits, AttnCache(k=ks, v=vs)
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            remat: bool = True):
+    logits, aux = forward(params, batch["tokens"], cfg, remat=remat)
+    ce = TF.cross_entropy(logits, batch["targets"], batch.get("mask"))
+    return ce + aux, {"aux_loss": aux, "ce": ce}
+
+
+def empty_cache(cfg: ModelConfig, batch: int, s_max: int,
+                dtype=jnp.bfloat16) -> AttnCache:
+    return TF.empty_cache(cfg, batch, s_max, dtype)

@@ -1,0 +1,280 @@
+"""RWKV6 "Finch" (rwkv6-3b): attention-free, data-dependent per-channel decay.
+
+Each block = time-mix (the matrix-valued recurrence, Pallas chunked-scan hot
+spot) + channel-mix (token-shifted squared-ReLU FFN). There is **no KV
+cache**: the per-sequence serving state is fixed-size —
+
+  wkv   [L, B, NH, hd, hd]   recurrence state (key-dim x value-dim)
+  tm_x  [L, B, d]            last token seen by time-mix token-shift
+  cm_x  [L, B, d]            last token seen by channel-mix token-shift
+
+which is what makes this arch the paper's degenerate-transfer case
+(DESIGN.md section 8): the prefill->decode handoff payload is O(MB) and
+independent of prompt length.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from . import layers as L
+from . import transformer as TF
+
+
+class RWKVState(NamedTuple):
+    wkv: jnp.ndarray    # [L, B, NH, hd, hd] f32
+    tm_x: jnp.ndarray   # [L, B, d]
+    cm_x: jnp.ndarray   # [L, B, d]
+
+
+NUM_MIX = 5  # token-shift mixers: w, k, v, r, g
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+def init_block(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    r = cfg.rwkv
+    d, ff = cfg.d_model, cfg.d_ff
+    nh = d // r.head_dim
+    pdt = L.dtype_of(cfg.param_dtype)
+    k = jax.random.split(rng, 12)
+    std = 0.02
+    out_std = std / math.sqrt(2 * cfg.num_layers)
+
+    def mat(key, shape, s=std):
+        return (jax.random.normal(key, shape) * s).astype(pdt)
+
+    return {
+        # --- time mix ---
+        "mu_base": jnp.full((d,), 0.5, pdt),
+        "mu": jnp.full((NUM_MIX, d), 0.5, pdt),
+        "tm_w1": mat(k[0], (d, NUM_MIX * r.mix_lora)),
+        "tm_w2": mat(k[1], (NUM_MIX, r.mix_lora, d)),
+        "w0": jnp.full((d,), -1.0, pdt),          # base log-log decay
+        "w1": mat(k[2], (d, r.decay_lora)),
+        "w2": mat(k[3], (r.decay_lora, d)),
+        "u": mat(k[4], (nh, r.head_dim), 0.1),    # per-head bonus
+        "wr": mat(k[5], (d, d)),
+        "wk": mat(k[6], (d, d)),
+        "wv": mat(k[7], (d, d)),
+        "wg": mat(k[8], (d, d)),
+        "wo": mat(k[9], (d, d), out_std),
+        "ln_x_scale": jnp.ones((d,), pdt),
+        "ln_x_bias": jnp.zeros((d,), pdt),
+        # --- channel mix ---
+        "cm_mu_k": jnp.full((d,), 0.5, pdt),
+        "cm_mu_r": jnp.full((d,), 0.5, pdt),
+        "cm_wk": mat(k[10], (d, ff)),
+        "cm_wv": mat(k[11], (ff, d), out_std),
+        "cm_wr": mat(jax.random.fold_in(rng, 99), (d, d)),
+        # --- norms ---
+        "norm_tm": L.init_rms_norm(d, pdt),
+        "norm_cm": L.init_rms_norm(d, pdt),
+    }
+
+
+def init(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    k_emb, k_layers = jax.random.split(rng)
+    keys = jax.random.split(k_layers, cfg.num_layers)
+    return {
+        "embed": L.init_embedding(k_emb, cfg),
+        "layers": jax.vmap(lambda k: init_block(k, cfg))(keys),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RWKVState:
+    r = cfg.rwkv
+    nh = cfg.d_model // r.head_dim
+    Lc = cfg.num_layers
+    return RWKVState(
+        wkv=jnp.zeros((Lc, batch, nh, r.head_dim, r.head_dim), jnp.float32),
+        tm_x=jnp.zeros((Lc, batch, cfg.d_model), dtype),
+        cm_x=jnp.zeros((Lc, batch, cfg.d_model), dtype),
+    )
+
+
+# ----------------------------------------------------------------------
+# token shift helpers
+# ----------------------------------------------------------------------
+def _shift_seq(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """[B, T, d] -> previous-token view; position 0 sees ``prev`` (or 0)."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev)
+    return shifted
+
+
+def _decay(p, xw: jnp.ndarray) -> jnp.ndarray:
+    """Data-dependent per-channel decay w in (0, 1). xw: [..., d]."""
+    loglog = (p["w0"].astype(jnp.float32)
+              + jnp.tanh(xw.astype(jnp.float32) @ p["w1"].astype(jnp.float32))
+              @ p["w2"].astype(jnp.float32))
+    return jnp.exp(-jnp.exp(loglog))
+
+
+def _mix_inputs(p, x: jnp.ndarray, xx: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+    """Data-dependent token-shift lerp (ddlerp) for the 5 mixers."""
+    base = x + xx * p["mu_base"].astype(x.dtype)
+    lora = jnp.tanh(base.astype(jnp.float32)
+                    @ p["tm_w1"].astype(jnp.float32))
+    lora = lora.reshape(*lora.shape[:-1], NUM_MIX, -1)          # [...,5,lm]
+    mix = jnp.einsum("...ml,mld->...md", lora,
+                     p["tm_w2"].astype(jnp.float32))            # [...,5,d]
+    mus = p["mu"].astype(jnp.float32)                           # [5, d]
+    outs = []
+    for i in range(NUM_MIX):
+        outs.append(x + xx * (mus[i] + mix[..., i, :]).astype(x.dtype))
+    return tuple(outs)  # xw, xk, xv, xr, xg
+
+
+def _ln_x(p, y: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Per-head group norm over head_dim (RWKV's ln_x), heads flattened."""
+    yf = y.astype(jnp.float32)
+    mean = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mean) * jax.lax.rsqrt(var + eps)
+    return yn
+
+
+# ----------------------------------------------------------------------
+# blocks (sequence form, for train/prefill)
+# ----------------------------------------------------------------------
+def time_mix_seq(p, x: jnp.ndarray, cfg: ModelConfig,
+                 wkv_state: Optional[jnp.ndarray],
+                 prev_x: Optional[jnp.ndarray]):
+    B, T, d = x.shape
+    hd = cfg.rwkv.head_dim
+    nh = d // hd
+    xx = _shift_seq(x, prev_x) - x
+    xw, xk, xv, xr, xg = _mix_inputs(p, x, xx)
+    r = (xr @ p["wr"]).reshape(B, T, nh, hd)
+    k = (xk @ p["wk"]).reshape(B, T, nh, hd)
+    v = (xv @ p["wv"]).reshape(B, T, nh, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = _decay(p, xw).reshape(B, T, nh, hd)
+
+    y, wkv_state = ops.rwkv6(r, k, v, w.astype(jnp.float32), p["u"],
+                             wkv_state)
+    y = _ln_x(p, y.reshape(B, T, nh, hd), cfg.norm_eps).reshape(B, T, d)
+    y = (y * p["ln_x_scale"].astype(jnp.float32)
+         + p["ln_x_bias"].astype(jnp.float32)).astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    return out, wkv_state, x[:, -1]
+
+
+def channel_mix_seq(p, x: jnp.ndarray, prev_x: Optional[jnp.ndarray]):
+    xx = _shift_seq(x, prev_x) - x
+    xk = x + xx * p["cm_mu_k"].astype(x.dtype)
+    xr = x + xx * p["cm_mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"]) * (k @ p["cm_wv"])
+    return out, x[:, -1]
+
+
+def block_seq(p, x: jnp.ndarray, cfg: ModelConfig,
+              state: Optional[Tuple] = None):
+    """state: (wkv, tm_x, cm_x) for this layer, or None (fresh sequence)."""
+    wkv, tm_x, cm_x = state if state is not None else (None, None, None)
+    h = L.rms_norm(x, p["norm_tm"], cfg.norm_eps)
+    dt, wkv, tm_x = time_mix_seq(p, h, cfg, wkv, tm_x)
+    x = x + dt
+    h = L.rms_norm(x, p["norm_cm"], cfg.norm_eps)
+    dc, cm_x = channel_mix_seq(p, h, cm_x)
+    x = x + dc
+    return x, (wkv, tm_x, cm_x)
+
+
+# ----------------------------------------------------------------------
+# blocks (single-token form, for decode)
+# ----------------------------------------------------------------------
+def block_step(p, x: jnp.ndarray, cfg: ModelConfig, state: Tuple):
+    """x: [B, d]; state: (wkv [B,NH,hd,hd], tm_x [B,d], cm_x [B,d])."""
+    wkv, tm_x, cm_x = state
+    B, d = x.shape
+    hd = cfg.rwkv.head_dim
+    nh = d // hd
+
+    h = L.rms_norm(x, p["norm_tm"], cfg.norm_eps)
+    xx = tm_x.astype(h.dtype) - h
+    xw, xk, xv, xr, xg = _mix_inputs(p, h, xx)
+    r = (xr @ p["wr"]).reshape(B, nh, hd)
+    k = (xk @ p["wk"]).reshape(B, nh, hd)
+    v = (xv @ p["wv"]).reshape(B, nh, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = _decay(p, xw).reshape(B, nh, hd)
+    y, wkv = ops.rwkv6_step(r, k, v, w, p["u"], wkv)
+    y = _ln_x(p, y, cfg.norm_eps).reshape(B, d)
+    y = (y * p["ln_x_scale"].astype(jnp.float32)
+         + p["ln_x_bias"].astype(jnp.float32)).astype(x.dtype)
+    x = x + (y * g) @ p["wo"]
+    new_tm_x = h
+
+    h = L.rms_norm(x, p["norm_cm"], cfg.norm_eps)
+    xxc = cm_x.astype(h.dtype) - h
+    xkc = h + xxc * p["cm_mu_k"].astype(h.dtype)
+    xrc = h + xxc * p["cm_mu_r"].astype(h.dtype)
+    kc = jnp.square(jax.nn.relu(xkc @ p["cm_wk"]))
+    x = x + jax.nn.sigmoid(xrc @ p["cm_wr"]) * (kc @ p["cm_wv"])
+    new_cm_x = h
+    return x, (wkv, new_tm_x, new_cm_x)
+
+
+# ----------------------------------------------------------------------
+# model-level entry points
+# ----------------------------------------------------------------------
+def forward(params, tokens: jnp.ndarray, cfg: ModelConfig,
+            remat: bool = False) -> jnp.ndarray:
+    x = L.embed(params["embed"], tokens, cfg)
+
+    def body(h, lp):
+        h, _ = block_seq(lp, h, cfg)
+        return h, None
+
+    if remat:
+        body = L.remat_wrap(body)
+    x, _ = L.layer_scan(body, x, params["layers"])
+    return L.lm_logits(params["embed"], x, cfg)
+
+
+def prefill(params, tokens: jnp.ndarray, cfg: ModelConfig,
+            s_max: Optional[int] = None) -> Tuple[jnp.ndarray, RWKVState]:
+    """Prefill = chunked scan over the prompt; returns fixed-size state."""
+    del s_max  # state is fixed-size; no cache to pre-allocate
+    x = L.embed(params["embed"], tokens, cfg)
+
+    def body(h, lp):
+        h, (wkv, tm_x, cm_x) = block_seq(lp, h, cfg)
+        return h, (wkv, tm_x, cm_x)
+
+    x, (wkv, tm_x, cm_x) = L.layer_scan(body, x, params["layers"])
+    logits = L.lm_logits(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, RWKVState(wkv=wkv, tm_x=tm_x, cm_x=cm_x)
+
+
+def decode_step(params, tokens: jnp.ndarray, state: RWKVState,
+                pos: jnp.ndarray, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, RWKVState]:
+    del pos  # recurrence is position-free
+    x = L.embed(params["embed"], tokens[:, None], cfg)[:, 0]
+
+    def body(h, xs):
+        lp, wkv, tm_x, cm_x = xs
+        h, (wkv, tm_x, cm_x) = block_step(lp, h, cfg, (wkv, tm_x, cm_x))
+        return h, (wkv, tm_x, cm_x)
+
+    x, (wkv, tm_x, cm_x) = L.layer_scan(
+        body, x, (params["layers"], state.wkv, state.tm_x, state.cm_x))
+    logits = L.lm_logits(params["embed"], x[:, None], cfg)[:, 0]
+    return logits, RWKVState(wkv=wkv, tm_x=tm_x, cm_x=cm_x)
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            remat: bool = True):
+    logits = forward(params, batch["tokens"], cfg, remat=remat)
+    return TF.cross_entropy(logits, batch["targets"], batch.get("mask")), {}

@@ -1,0 +1,189 @@
+"""Dense decoder-only GQA transformer (yi-34b / qwen3 / command-r / qwen2 /
+llama32-3b) with MaxText-style scanned layers.
+
+Three entry points per model (the serving split the paper studies):
+  forward      full-sequence training forward (causal)
+  prefill      full-sequence forward that also returns the dense KV cache
+  decode_step  one autoregressive token against the KV cache
+
+KV cache layout: [L, B, S_max, KV, hd] stacked over layers so the layer
+scan consumes it as xs. All attention math routes through repro.kernels.ops.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from . import layers as L
+
+
+class AttnCache(NamedTuple):
+    """Dense KV cache for attention archs. k/v: [L, B, S_max, KV, hd]."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+def init_block(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(rng)
+    pdt = L.dtype_of(cfg.param_dtype)
+    return {
+        "attn": L.init_attention(k1, cfg),
+        "mlp": L.init_mlp(k2, cfg),
+        "norm_attn": L.init_rms_norm(cfg.d_model, pdt),
+        "norm_mlp": L.init_rms_norm(cfg.d_model, pdt),
+    }
+
+
+def init(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    k_emb, k_layers = jax.random.split(rng)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    return {
+        "embed": L.init_embedding(k_emb, cfg),
+        "layers": jax.vmap(lambda k: init_block(k, cfg))(layer_keys),
+    }
+
+
+# ----------------------------------------------------------------------
+# blocks
+# ----------------------------------------------------------------------
+def block_forward(p: Dict[str, Any], x: jnp.ndarray, positions: jnp.ndarray,
+                  cfg: ModelConfig, *, return_kv: bool = False):
+    """Full-seq pre-norm block. x: [B, S, d]; positions: [B, S]."""
+    h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    attn = L.flash_gqa(q, k, v, causal=True,
+                        window=cfg.sliding_window)
+    x = x + L.out_project(p["attn"], attn, cfg)
+    h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+    x = x + L.mlp_forward(p["mlp"], h, cfg)
+    if return_kv:
+        return x, (k, v)
+    return x
+
+
+def block_decode(p: Dict[str, Any], x: jnp.ndarray, cache_k: jnp.ndarray,
+                 cache_v: jnp.ndarray, pos: jnp.ndarray, cfg: ModelConfig):
+    """One-token block step. x: [B, 1, d]; cache_*: [B, S_max, KV, hd];
+    pos: [B] (index the new token is written at)."""
+    h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg)
+    q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
+    cache_k = L.cache_write(cache_k, k, pos)
+    cache_v = L.cache_write(cache_v, v, pos)
+    attn = L.cached_attention(q, cache_k, cache_v, pos,
+                              window=cfg.sliding_window)
+    x = x + L.out_project(p["attn"], attn, cfg)
+    h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+    x = x + L.mlp_forward(p["mlp"], h, cfg)
+    return x, cache_k, cache_v
+
+
+# ----------------------------------------------------------------------
+# model-level entry points
+# ----------------------------------------------------------------------
+def _scan_layers(body, x, layer_params, cfg: ModelConfig,
+                 remat: bool = False, xs_extra=None):
+    if remat:
+        body = L.remat_wrap(body)
+    xs = layer_params if xs_extra is None else (layer_params, *xs_extra)
+    return L.layer_scan(body, x, xs)
+
+
+def forward_from_embeddings(params, x: jnp.ndarray, positions: jnp.ndarray,
+                            cfg: ModelConfig, remat: bool = False
+                            ) -> jnp.ndarray:
+    """x: [B, S, d] pre-embedded inputs -> logits [B, S, V] (VLM path)."""
+    def body(h, lp):
+        return block_forward(lp, h, positions, cfg), None
+
+    x, _ = _scan_layers(body, x, params["layers"], cfg, remat)
+    return L.lm_logits(params["embed"], x, cfg)
+
+
+def forward(params, tokens: jnp.ndarray, cfg: ModelConfig,
+            remat: bool = False) -> jnp.ndarray:
+    """tokens: [B, S] -> logits [B, S, V]."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    return forward_from_embeddings(params, x, positions, cfg, remat)
+
+
+def prefill_from_embeddings(params, x: jnp.ndarray, positions: jnp.ndarray,
+                            cfg: ModelConfig, s_max: Optional[int] = None
+                            ) -> Tuple[jnp.ndarray, AttnCache]:
+    """Pre-embedded prefill (VLM path). x: [B, S, d]."""
+    B, S = x.shape[:2]
+    s_max = s_max or S
+
+    def body(h, lp):
+        h, (k, v) = block_forward(lp, h, positions, cfg, return_kv=True)
+        return h, (k, v)
+
+    x, (ks, vs) = _scan_layers(body, x, params["layers"], cfg)
+    if s_max > S:
+        pad = [(0, 0), (0, s_max - S), (0, 0), (0, 0)]
+        ks = jnp.pad(ks, [(0, 0)] + pad)
+        vs = jnp.pad(vs, [(0, 0)] + pad)
+    logits = L.lm_logits(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, AttnCache(k=ks, v=vs)
+
+
+def prefill(params, tokens: jnp.ndarray, cfg: ModelConfig,
+            s_max: Optional[int] = None
+            ) -> Tuple[jnp.ndarray, AttnCache]:
+    """tokens: [B, S] -> (last-position logits [B, V], cache)."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    return prefill_from_embeddings(params, x, positions, cfg, s_max)
+
+
+def decode_step(params, tokens: jnp.ndarray, cache: AttnCache,
+                pos: jnp.ndarray, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, AttnCache]:
+    """tokens: [B] new token ids; pos: [B] their positions.
+    Returns (logits [B, V], updated cache)."""
+    x = L.embed(params["embed"], tokens[:, None], cfg)
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        h, ck, cv = block_decode(lp, h, ck, cv, pos, cfg)
+        return h, (ck, cv)
+
+    x, (ks, vs) = L.layer_scan(body, x, (params["layers"], cache.k, cache.v))
+    logits = L.lm_logits(params["embed"], x, cfg)[:, 0]
+    return logits, AttnCache(k=ks, v=vs)
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            remat: bool = True) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits = forward(params, batch["tokens"], cfg, remat=remat)
+    return cross_entropy(logits, batch["targets"], batch.get("mask")), {}
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def empty_cache(cfg: ModelConfig, batch: int, s_max: int,
+                dtype=jnp.bfloat16) -> AttnCache:
+    shape = (cfg.num_layers, batch, s_max, cfg.num_kv_heads, cfg.head_dim)
+    return AttnCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))

@@ -1,0 +1,89 @@
+"""VLM backbone (internvl2-2b): InternViT frontend STUB + InternLM2 LM.
+
+Per the assignment the modality frontend is a stub: ``input_specs()``
+provides precomputed patch embeddings [B, num_patches, frontend_dim]. A
+learned MLP projector maps them into the LM embedding space; the patch
+tokens are prepended to the text tokens and the standard dense GQA
+transformer (``transformer.py``) runs over the combined sequence.
+
+Serving: prefill covers patches + prompt text; decode is standard LM
+decode (the image contributes only KV-cache entries) — so the paper's
+disaggregation applies unchanged, with a prefill payload enlarged by
+``num_patches`` tokens of KV.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from . import transformer as TF
+
+AttnCache = TF.AttnCache
+
+
+# ----------------------------------------------------------------------
+def init(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    k_tf, k_proj = jax.random.split(rng)
+    params = TF.init(k_tf, cfg)
+    pdt = L.dtype_of(cfg.param_dtype)
+    params["projector"] = {
+        "w": (jax.random.normal(k_proj, (cfg.vision.frontend_dim, cfg.d_model))
+              * 0.02).astype(pdt),
+        "b": jnp.zeros((cfg.d_model,), pdt),
+    }
+    return params
+
+
+def _combined_embeddings(params, patches: jnp.ndarray, tokens: jnp.ndarray,
+                         cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (x [B, Np+S, d], positions [B, Np+S])."""
+    pj = params["projector"]
+    cdt = L.dtype_of(cfg.compute_dtype)
+    img = patches.astype(cdt) @ pj["w"] + pj["b"]             # [B, Np, d]
+    txt = L.embed(params["embed"], tokens, cfg)               # [B, S, d]
+    x = jnp.concatenate([img, txt], axis=1)
+    B, S_all = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S_all), (B, S_all))
+    return x, positions
+
+
+# ----------------------------------------------------------------------
+def forward(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            remat: bool = False) -> jnp.ndarray:
+    """batch: {"patches": [B,Np,fd], "tokens": [B,S]} -> logits over the
+    text positions [B, S, V] (patch positions are dropped)."""
+    patches, tokens = batch["patches"], batch["tokens"]
+    Np = patches.shape[1]
+    x, positions = _combined_embeddings(params, patches, tokens, cfg)
+    logits = TF.forward_from_embeddings(params, x, positions, cfg, remat)
+    return logits[:, Np:]
+
+
+def prefill(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            s_max: Optional[int] = None) -> Tuple[jnp.ndarray, AttnCache]:
+    """Cache covers patch + text positions; s_max counts the combined len."""
+    patches, tokens = batch["patches"], batch["tokens"]
+    x, positions = _combined_embeddings(params, patches, tokens, cfg)
+    return TF.prefill_from_embeddings(params, x, positions, cfg, s_max)
+
+
+def decode_step(params, tokens: jnp.ndarray, cache: AttnCache,
+                pos: jnp.ndarray, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, AttnCache]:
+    """pos is the absolute position in the combined (patch+text) sequence."""
+    return TF.decode_step(params, tokens, cache, pos, cfg)
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            remat: bool = True):
+    logits = forward(params, batch, cfg, remat=remat)
+    return TF.cross_entropy(logits, batch["targets"], batch.get("mask")), {}
+
+
+def empty_cache(cfg: ModelConfig, batch: int, s_max: int,
+                dtype=jnp.bfloat16) -> AttnCache:
+    return TF.empty_cache(cfg, batch, s_max, dtype)

@@ -1,0 +1,3 @@
+from . import steps
+from .steps import StepBundle, build_decode_step, build_prefill_step, \
+    build_step, build_train_step

@@ -1,0 +1,127 @@
+"""jit'd step builders with production shardings.
+
+Used three ways:
+  * launch/dryrun.py lowers+compiles them against ShapeDtypeStruct inputs
+    on the production meshes (the multi-pod dry-run deliverable),
+  * benchmarks/roofline.py reads their cost/memory analysis,
+  * launch/train.py / launch/serve.py execute them for real (CPU-scale).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.dist.sharding import (batch_shardings, data_axes,
+                                 opt_state_shardings, param_shardings,
+                                 replicated, state_shardings)
+from repro.models import get_model
+from repro.train.optimizer import AdamWState, Optimizer, adamw, \
+    apply_updates, cosine_schedule
+
+
+class StepBundle(NamedTuple):
+    """A jit'd step plus everything needed to lower or run it."""
+    fn: Any                      # the jit'd callable
+    abstract_args: Tuple         # ShapeDtypeStructs to .lower(*args) with
+    shardings: Tuple             # in_shardings actually used
+    model: Any
+
+
+# ----------------------------------------------------------------------
+def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
+                     remat: bool = True,
+                     optimizer: Optional[Optimizer] = None) -> StepBundle:
+    model = get_model(cfg)
+    opt = optimizer or adamw(cosine_schedule(3e-4))
+    abs_params = model.abstract_params()
+    abs_opt = jax.eval_shape(opt.init, abs_params)
+    p_sh = param_shardings(cfg, abs_params, mesh)
+    # optimizer moments: ZeRO-sharded over data on top of the TP layout
+    # (f32 m+v alone would exceed 16 GB HBM for the 34B archs otherwise)
+    m_sh = opt_state_shardings(p_sh, abs_params, mesh)
+    opt_sh = AdamWState(m=m_sh, v=m_sh, count=replicated(mesh))
+    abs_batch = model.train_inputs(shape)
+    b_sh = batch_shardings(abs_batch, mesh)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch, remat=remat)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        updates, new_opt = opt.update(grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+        return new_params, new_opt, loss
+
+    fn = jax.jit(train_step,
+                 in_shardings=(p_sh, opt_sh, b_sh),
+                 out_shardings=(p_sh, opt_sh, None),
+                 donate_argnums=(0, 1))
+    return StepBundle(fn=fn, abstract_args=(abs_params, abs_opt, abs_batch),
+                      shardings=(p_sh, opt_sh, b_sh), model=model)
+
+
+# ----------------------------------------------------------------------
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh,
+                       shape: InputShape) -> StepBundle:
+    model = get_model(cfg)
+    abs_params = model.abstract_params()
+    p_sh = param_shardings(cfg, abs_params, mesh)
+    abs_batch = model.prefill_inputs(shape)
+    b_sh = batch_shardings(abs_batch, mesh)
+    s_max = shape.seq_len
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, s_max=s_max)
+
+    fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh))
+    return StepBundle(fn=fn, abstract_args=(abs_params, abs_batch),
+                      shardings=(p_sh, b_sh), model=model)
+
+
+# ----------------------------------------------------------------------
+def build_decode_step(cfg: ModelConfig, mesh: Mesh,
+                      shape: InputShape) -> StepBundle:
+    """serve_step: one new token against a seq_len-deep decode state."""
+    model = get_model(cfg)
+    abs_params = model.abstract_params()
+    p_sh = param_shardings(cfg, abs_params, mesh)
+    inputs = model.decode_inputs(shape)
+    abs_tokens, abs_state, abs_pos = (inputs["tokens"], inputs["state"],
+                                      inputs["pos"])
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    tok_spec = P(dp) if shape.global_batch % dp_size == 0 else P()
+    tok_sh = NamedSharding(mesh, tok_spec)
+    s_sh = state_shardings(abs_state, mesh)
+
+    def serve_step(params, tokens, state, pos):
+        return model.decode_step(params, tokens, state, pos)
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(p_sh, tok_sh, s_sh, tok_sh),
+                 donate_argnums=(2,))
+    return StepBundle(fn=fn,
+                      abstract_args=(abs_params, abs_tokens, abs_state,
+                                     abs_pos),
+                      shardings=(p_sh, tok_sh, s_sh, tok_sh), model=model)
+
+
+# ----------------------------------------------------------------------
+def build_step(kind: str, cfg: ModelConfig, mesh: Mesh,
+               shape: InputShape, **kw) -> StepBundle:
+    if kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape)
+    if kind == "decode":
+        return build_decode_step(cfg, mesh, shape)
+    raise ValueError(kind)

@@ -1,0 +1,3 @@
+from . import optimizer
+from .optimizer import AdamWState, Optimizer, adamw, apply_updates, \
+    cosine_schedule, global_norm

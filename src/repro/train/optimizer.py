@@ -1,0 +1,92 @@
+"""Pure-JAX AdamW + LR schedules (no optax dependency in this container).
+
+Optimizer state is a params-shaped pytree pair (m, v) plus a scalar count,
+so the same NamedShardings as the parameters apply — which is what the
+train-step builder relies on for sharded optimizer state (ZeRO-style: the
+state shards with the TP/EP layout of its parameter).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], AdamWState]
+    update: Callable[[Any, AdamWState, Any], Tuple[Any, AdamWState]]
+
+
+def adamw(learning_rate, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          grad_clip_norm: Optional[float] = 1.0) -> Optimizer:
+    """learning_rate: float or callable(step) -> float."""
+
+    def lr_at(count):
+        if callable(learning_rate):
+            return learning_rate(count)
+        return learning_rate
+
+    def init(params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(
+            p, dtype=jnp.float32)   # f32 moments under bf16 params
+        return AdamWState(m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state: AdamWState, params) -> Tuple[Any, AdamWState]:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        count = state.count + 1
+        lr = lr_at(count)
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g,
+                         state.m, grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g,
+                         state.v, grads)
+
+        def upd(p, mm, vv):
+            step = (mm / c1) / (jnp.sqrt(vv / c2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, m, v)
+        return updates, AdamWState(m=m, v=v, count=count)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+# ----------------------------------------------------------------------
+def cosine_schedule(peak_lr: float, warmup_steps: int = 200,
+                    total_steps: int = 10_000,
+                    final_frac: float = 0.1) -> Callable:
+    def lr(count):
+        c = count.astype(jnp.float32)
+        warm = peak_lr * c / max(warmup_steps, 1)
+        prog = jnp.clip((c - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(c < warmup_steps, warm, peak_lr * cos)
+    return lr

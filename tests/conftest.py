@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the host's real single device; only launch/dryrun.py forces 512."""
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """The full suite jits hundreds of programs; on the 35 GB container the
+    accumulated executables eventually OOM LLVM's JIT ("Cannot allocate
+    memory"). Dropping caches per module keeps memory bounded."""
+    yield
+    jax.clear_caches()
+    gc.collect()

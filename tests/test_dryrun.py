@@ -1,0 +1,53 @@
+"""Dry-run machinery smoke: one real (arch x shape x mesh) cell compiled
+in a subprocess with 512 forced host devices (never in-process — the rest
+of the suite must keep seeing 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def _run_cell(arch, shape, mesh):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env.pop("XLA_FLAGS", None)
+    code = (
+        "import json\n"
+        "from repro.launch.dryrun import run_cell\n"
+        f"rec = run_cell({arch!r}, {shape!r}, {mesh}, verbose=False)\n"
+        "rec.pop('traceback', None)\n"
+        "print('REC:' + json.dumps(rec))\n")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("REC:")][0]
+    return json.loads(line[4:])
+
+
+@pytest.mark.slow
+def test_single_pod_cell_compiles_with_roofline():
+    rec = _run_cell("qwen2-0.5b", "decode_32k", False)
+    assert rec["status"] == "ok", rec.get("error")
+    r = rec["roofline"]
+    assert r["flops"] > 0 and r["hbm_bytes"] > 0
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert rec["argument_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_multi_pod_cell_compiles():
+    rec = _run_cell("qwen2-0.5b", "decode_32k", True)
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["mesh"] == "2x16x16"
+
+
+def test_skip_cells_are_recorded():
+    # no jax device work needed for skips: run in-process via the module
+    # logic (import is safe — only __main__ forces the flag... the module
+    # sets XLA_FLAGS at import; so use a subprocess here too)
+    rec = _run_cell("yi-34b", "long_500k", False)
+    assert rec["status"] == "skip"
+    assert "sub-quadratic" in rec["reason"]

@@ -1,0 +1,92 @@
+"""Energy meter, DVFS power model, Pareto utilities (paper Experiment 2
+machinery) — unit + hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import (CostModel, EnergyMeter, ParetoPoint,
+                        min_energy_under_slo, pareto_frontier, sweet_spot)
+from repro.core.costs import DEFAULT_FREQ_GRID, StepCost
+
+
+def test_meter_accumulates_and_merges():
+    a, b = EnergyMeter(), EnergyMeter()
+    a.add_power("acc0", 100.0, 2.0, stage="prefill")
+    b.add("cpu", 50.0, stage="transfer")
+    m = a.merge(b)
+    assert m.total_j == pytest.approx(250.0)
+    assert m.joules["acc0"] == pytest.approx(200.0)
+    assert m.by_stage["prefill"] == pytest.approx(200.0)
+
+
+def test_power_model_monotone_in_phi():
+    cost = CostModel(get_config("llama32-3b"))
+    ps = [cost.power_w(phi, 1.0) for phi in DEFAULT_FREQ_GRID]
+    assert all(p2 > p1 for p1, p2 in zip(ps, ps[1:]))
+    assert cost.power_w(0.0, 1.0) == pytest.approx(cost.idle_power_w())
+
+
+def test_step_cost_dvfs_semantics():
+    c = StepCost(compute_s=1.0, memory_s=0.5)
+    assert c.time(1.0) == 1.0
+    assert c.time(0.5) == 2.0            # compute stretches
+    m = StepCost(compute_s=0.1, memory_s=1.0)
+    assert m.time(0.5) == 1.0            # memory-bound: phi is free
+    assert m.utilization(1.0) == pytest.approx(0.1)
+
+
+def test_energy_u_curve_exists():
+    """E(phi) = P(phi) * T(phi) is U-shaped for a mixed-bound step: the
+    paper's central DVFS observation."""
+    cost = CostModel(get_config("llama32-3b"))
+    step = StepCost(compute_s=1.0, memory_s=0.6)
+    energies = [cost.power_w(phi, step.utilization(phi)) * step.time(phi)
+                for phi in DEFAULT_FREQ_GRID]
+    best = int(np.argmin(energies))
+    assert 0 < best < len(energies) - 1, \
+        f"sweet spot at the grid edge: {energies}"
+
+
+# ----------------------------------------------------------------------
+def _pts(vals):
+    return [ParetoPoint(phi=0.1 * i, latency_s=l, energy_j=e)
+            for i, (l, e) in enumerate(vals)]
+
+
+def test_pareto_frontier_basic():
+    pts = _pts([(1.0, 5.0), (2.0, 3.0), (3.0, 4.0), (4.0, 1.0)])
+    front = pareto_frontier(pts)
+    assert [(p.latency_s, p.energy_j) for p in front] == \
+        [(1.0, 5.0), (2.0, 3.0), (4.0, 1.0)]
+
+
+def test_slo_selection():
+    pts = _pts([(1.0, 5.0), (2.0, 3.0), (4.0, 1.0)])
+    assert min_energy_under_slo(pts, 2.5).energy_j == 3.0
+    assert min_energy_under_slo(pts, 0.5) is None
+    assert min_energy_under_slo(pts, None).energy_j == 1.0
+    assert sweet_spot(pts).energy_j == 1.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.floats(0.01, 100), st.floats(0.01, 100)),
+                min_size=1, max_size=30))
+def test_pareto_frontier_is_nondominated(vals):
+    pts = _pts(vals)
+    front = pareto_frontier(pts)
+    # 1) every frontier point is a real point
+    assert all(p in pts for p in front)
+    # 2) no frontier point dominates another
+    for p in front:
+        for q in front:
+            if p is not q:
+                assert not (q.latency_s <= p.latency_s
+                            and q.energy_j <= p.energy_j
+                            and (q.latency_s < p.latency_s
+                                 or q.energy_j < p.energy_j))
+    # 3) every non-frontier point is dominated by some frontier point
+    for p in pts:
+        if p not in front:
+            assert any(q.latency_s <= p.latency_s
+                       and q.energy_j <= p.energy_j for q in front)

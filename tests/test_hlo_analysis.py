@@ -1,0 +1,83 @@
+"""HLO collective parsing + roofline term machinery."""
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.dist.hlo_analysis import (RooflineTerms, collective_stats,
+                                     linear_extrapolate, model_flops,
+                                     vmem_resident_traffic)
+
+HLO = """
+HloModule jit_step
+ENTRY main {
+  %p = bf16[8,1024,128]{2,1,0} parameter(0)
+  %ag = bf16[8,16384,128]{2,1,0} all-gather(%p), dimensions={1}
+  %ar = f32[4096]{0} all-reduce(%x), to_apply=%add
+  %ar2 = f32[4096]{0} all-reduce-start(%y), to_apply=%add
+  %rs = bf16[2,64]{1,0} reduce-scatter(%z), dimensions={0}
+  %cp = bf16[128,8]{1,0} collective-permute(%w)
+  %a2a = (f32[16]{0}, f32[16]{0}) all-to-all(%u, %v)
+  %dot = f32[64,64]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_collective_stats_parses_all_kinds():
+    st = collective_stats(HLO)
+    assert st.count_by_kind == {"all-gather": 1, "all-reduce": 2,
+                                "reduce-scatter": 1,
+                                "collective-permute": 1, "all-to-all": 1}
+    assert st.bytes_by_kind["all-gather"] == 8 * 16384 * 128 * 2
+    assert st.bytes_by_kind["all-reduce"] == 2 * 4096 * 4
+    assert st.bytes_by_kind["all-to-all"] == 2 * 16 * 4
+    assert st.total_count == 6
+
+
+def test_collective_stats_ignores_non_collectives():
+    assert collective_stats("%d = f32[8]{0} dot(%a, %b)").total_bytes == 0
+
+
+def test_roofline_terms_dominance():
+    t = RooflineTerms(flops=197e12, hbm_bytes=819e9 * 3,
+                      collective_bytes=0, n_chips=256)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(3.0)
+    assert t.dominant == "memory"
+    assert t.step_time_s == pytest.approx(3.0)
+
+
+def test_vmem_adjustment_reduces_memory_term():
+    t = RooflineTerms(flops=1e12, hbm_bytes=1e12, collective_bytes=0,
+                      n_chips=256, vmem_resident_bytes=4e11)
+    assert t.memory_s < t.memory_s_raw
+    assert t.memory_s == pytest.approx((1e12 - 4e11) / 819e9)
+
+
+def test_linear_extrapolate_exact():
+    # f(L) = 10 + 3L
+    assert linear_extrapolate(13, 16, 1, 2, 60) == pytest.approx(190)
+
+
+def test_model_flops_train_vs_serve():
+    cfg = get_config("llama32-3b")
+    tr = model_flops(cfg, SHAPES["train_4k"], 256)
+    pf = model_flops(cfg, SHAPES["prefill_32k"], 256)
+    dc = model_flops(cfg, SHAPES["decode_32k"], 256)
+    assert tr == pytest.approx(
+        6 * cfg.param_count(active_only=True) * 256 * 4096 / 256)
+    assert pf == pytest.approx(tr / 3)   # same token count, fwd-only
+    assert dc < pf / 1000                # one token per seq
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("deepseek-moe-16b")
+    dense_equiv = 6 * cfg.param_count() * 256 * 4096 / 256
+    assert model_flops(cfg, SHAPES["train_4k"], 256) < 0.4 * dense_equiv
+
+
+def test_vmem_traffic_zero_for_pure_ssm_attention():
+    cfg = get_config("rwkv6-3b")
+    v = vmem_resident_traffic(cfg, SHAPES["train_4k"], 256)
+    assert v > 0                          # scan-state stream
+    cfg2 = get_config("yi-34b")
+    v2 = vmem_resident_traffic(cfg2, SHAPES["train_4k"], 256)
+    assert v2 > 0                         # attention logits

@@ -1,0 +1,215 @@
+"""Per-kernel correctness: Pallas (interpret mode on CPU) vs jnp oracle,
+swept over shapes and dtypes (assignment deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_prefill, mamba2_ssd, ops, paged_decode, ref
+from repro.kernels import rwkv6_scan
+
+
+def _key(i):
+    return jax.random.PRNGKey(i)
+
+
+TOL = {jnp.float32: 2e-4, jnp.bfloat16: 2e-2}
+
+
+# ----------------------------------------------------------------------
+# flash attention (prefill)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,T,H,KV,hd", [
+    (1, 64, 64, 4, 4, 32),        # MHA square
+    (2, 128, 128, 8, 2, 64),      # GQA
+    (1, 96, 96, 4, 1, 64),        # MQA, ragged seq (pads internally)
+    (2, 64, 192, 8, 4, 32),       # cross-size KV (q_offset chunk)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_vs_ref(B, S, T, H, KV, hd, dtype):
+    q = jax.random.normal(_key(1), (B, S, H, hd), dtype)
+    k = jax.random.normal(_key(2), (B, T, KV, hd), dtype)
+    v = jax.random.normal(_key(3), (B, T, KV, hd), dtype)
+    off = T - S
+    out = flash_prefill.flash_attention(
+        q, k, v, causal=True, q_offset=off, block_q=32, block_k=64,
+        interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [16, 48])
+def test_flash_sliding_window(window):
+    B, S, H, hd = 1, 128, 4, 32
+    q = jax.random.normal(_key(1), (B, S, H, hd))
+    k = jax.random.normal(_key(2), (B, S, H, hd))
+    v = jax.random.normal(_key(3), (B, S, H, hd))
+    out = flash_prefill.flash_attention(q, k, v, causal=True, window=window,
+                                        block_q=32, block_k=32,
+                                        interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-4)
+
+
+def test_flash_noncausal():
+    B, S, H, hd = 2, 64, 4, 32
+    q = jax.random.normal(_key(1), (B, S, H, hd))
+    k = jax.random.normal(_key(2), (B, S, H, hd))
+    v = jax.random.normal(_key(3), (B, S, H, hd))
+    out = flash_prefill.flash_attention(q, k, v, causal=False, block_q=32,
+                                        block_k=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-4)
+
+
+# ----------------------------------------------------------------------
+# paged attention (decode)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,KV,hd,pages,page", [
+    (2, 8, 2, 64, 16, 16),
+    (3, 4, 4, 32, 8, 32),
+    (1, 16, 16, 64, 32, 16),      # MHA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_vs_ref(B, H, KV, hd, pages, page, dtype):
+    max_pages = pages // 2
+    q = jax.random.normal(_key(1), (B, H, hd), dtype)
+    kp = jax.random.normal(_key(2), (pages, page, KV, hd), dtype)
+    vp = jax.random.normal(_key(3), (pages, page, KV, hd), dtype)
+    bt = jnp.stack([jax.random.permutation(_key(10 + b), pages)[:max_pages]
+                    for b in range(B)]).astype(jnp.int32)
+    lens = jax.random.randint(_key(4), (B,), 1, max_pages * page + 1)
+    out = paged_decode.paged_attention(q, kp, vp, bt, lens, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_paged_ragged_lengths():
+    """Pages past seq_len must not contribute (pl.when skip)."""
+    B, H, KV, hd, pages, page = 2, 4, 4, 32, 8, 16
+    q = jax.random.normal(_key(1), (B, H, hd))
+    kp = jax.random.normal(_key(2), (pages, page, KV, hd))
+    vp = jax.random.normal(_key(3), (pages, page, KV, hd))
+    bt = jnp.tile(jnp.arange(4, dtype=jnp.int32), (B, 1))
+    lens = jnp.array([1, 64], jnp.int32)
+    out = paged_decode.paged_attention(q, kp, vp, bt, lens, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-4)
+
+
+# ----------------------------------------------------------------------
+# rwkv6 chunked scan
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,NH,hd,chunk", [
+    (1, 64, 2, 32, 16),
+    (2, 96, 4, 64, 32),          # T not a chunk-multiple of 64 (pads)
+    (1, 128, 1, 64, 64),
+])
+def test_rwkv6_vs_ref(B, T, NH, hd, chunk):
+    r = jax.random.normal(_key(1), (B, T, NH, hd))
+    k = jax.random.normal(_key(2), (B, T, NH, hd))
+    v = jax.random.normal(_key(3), (B, T, NH, hd))
+    w = jax.nn.sigmoid(jax.random.normal(_key(4), (B, T, NH, hd))) \
+        * 0.5 + 0.45
+    u = jax.random.normal(_key(5), (NH, hd)) * 0.1
+    y, s = ops.rwkv6(r, k, v, w, u, None, chunk=chunk,
+                     backend="pallas_interpret")
+    y_ref, s_ref = ref.rwkv6_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), atol=5e-4)
+
+
+def test_rwkv6_state_carry():
+    """Scanning two halves with state carry == one full scan."""
+    B, T, NH, hd = 1, 64, 2, 32
+    r = jax.random.normal(_key(1), (B, T, NH, hd))
+    k = jax.random.normal(_key(2), (B, T, NH, hd))
+    v = jax.random.normal(_key(3), (B, T, NH, hd))
+    w = jax.nn.sigmoid(jax.random.normal(_key(4), (B, T, NH, hd))) \
+        * 0.5 + 0.45
+    u = jax.random.normal(_key(5), (NH, hd)) * 0.1
+    y_full, s_full = ref.rwkv6_scan_ref(r, k, v, w, u)
+    h = T // 2
+    y1, s1 = ops.rwkv6(r[:, :h], k[:, :h], v[:, :h], w[:, :h], u, None,
+                       chunk=16, backend="pallas_interpret")
+    y2, s2 = ops.rwkv6(r[:, h:], k[:, h:], v[:, h:], w[:, h:], u, s1,
+                       chunk=16, backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=5e-4)
+
+
+def test_rwkv6_step_matches_scan():
+    """Single-token recurrent step == one-token scan (decode path)."""
+    B, NH, hd = 2, 2, 32
+    state = jax.random.normal(_key(9), (B, NH, hd, hd))
+    r = jax.random.normal(_key(1), (B, 1, NH, hd))
+    k = jax.random.normal(_key(2), (B, 1, NH, hd))
+    v = jax.random.normal(_key(3), (B, 1, NH, hd))
+    w = jax.nn.sigmoid(jax.random.normal(_key(4), (B, 1, NH, hd))) * 0.5 \
+        + 0.45
+    u = jax.random.normal(_key(5), (NH, hd)) * 0.1
+    y_scan, s_scan = ref.rwkv6_scan_ref(r, k, v, w, u, state)
+    y_step, s_step = ops.rwkv6_step(r[:, 0], k[:, 0], v[:, 0], w[:, 0], u,
+                                    state)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_scan[:, 0]),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_step), np.asarray(s_scan),
+                               atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# mamba2 SSD chunked scan
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,NH,P,N,chunk", [
+    (1, 64, 2, 32, 16, 16),
+    (2, 96, 4, 64, 64, 32),
+    (1, 128, 1, 64, 32, 64),
+])
+def test_mamba2_vs_ref(B, T, NH, P, N, chunk):
+    x = jax.random.normal(_key(1), (B, T, NH, P))
+    dt = jax.nn.softplus(jax.random.normal(_key(2), (B, T, NH)))
+    A = -jnp.abs(jax.random.normal(_key(3), (NH,)))
+    Bm = jax.random.normal(_key(4), (B, T, N))
+    Cm = jax.random.normal(_key(5), (B, T, N))
+    D = jax.random.normal(_key(6), (NH,)) * 0.1
+    y, s = ops.mamba2(x, dt, A, Bm, Cm, D, None, chunk=chunk,
+                      backend="pallas_interpret")
+    y_ref, s_ref = ref.mamba2_ssd_ref(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_mamba2_step_matches_scan():
+    B, NH, P, N = 2, 2, 32, 16
+    state = jax.random.normal(_key(9), (B, NH, N, P))
+    x = jax.random.normal(_key(1), (B, 1, NH, P))
+    dt = jax.nn.softplus(jax.random.normal(_key(2), (B, 1, NH)))
+    A = -jnp.abs(jax.random.normal(_key(3), (NH,)))
+    Bm = jax.random.normal(_key(4), (B, 1, N))
+    Cm = jax.random.normal(_key(5), (B, 1, N))
+    D = jax.random.normal(_key(6), (NH,)) * 0.1
+    y_scan, s_scan = ref.mamba2_ssd_ref(x, dt, A, Bm, Cm, D, state)
+    y_step, s_step = ops.mamba2_step(x[:, 0], dt[:, 0], A, Bm[:, 0],
+                                     Cm[:, 0], D, state)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_scan[:, 0]),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_step), np.asarray(s_scan),
+                               atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# dispatch / backend plumbing
+# ----------------------------------------------------------------------
+def test_ops_backend_dispatch():
+    assert ops.resolve_backend("ref") == "ref"
+    assert ops.resolve_backend("pallas_interpret") == "pallas_interpret"
+    # auto on CPU -> ref
+    assert ops.resolve_backend(None) in ("ref", "pallas")

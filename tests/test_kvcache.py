@@ -1,0 +1,146 @@
+"""Paged KV pool: unit + hypothesis property tests (pool invariants hold
+under any operation mix) + device-backed pages vs dense attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kvcache import DevicePagedKV, OutOfPages, PagedKVPool
+from repro.kernels import ops, ref
+
+
+# ----------------------------------------------------------------------
+def test_basic_alloc_free():
+    pool = PagedKVPool(num_pages=10, page_size=16)
+    pages = pool.allocate(1, 40)            # 3 pages
+    assert len(pages) == 3
+    assert pool.used_pages == 3
+    pool.allocate(1, 8)                     # 48 tokens -> still 3 pages
+    assert pool.used_pages == 3
+    pool.allocate(1, 1)                     # 49 -> 4 pages
+    assert pool.used_pages == 4
+    assert pool.free_seq(1) == 4
+    assert pool.used_pages == 0
+
+
+def test_out_of_pages_raises():
+    pool = PagedKVPool(num_pages=4, page_size=16)
+    pool.allocate(1, 64)
+    with pytest.raises(OutOfPages):
+        pool.allocate(2, 1)
+    pool.check_invariants()
+
+
+def test_lru_eviction_order():
+    pool = PagedKVPool(num_pages=12, page_size=16)
+    for sid in (1, 2, 3):
+        pool.allocate(sid, 64)
+    pool.touch(1)                            # 2 becomes LRU
+    assert pool.evict_lru() == 2
+    assert pool.evict_lru(exclude={3}) == 1
+    pool.check_invariants()
+
+
+def test_from_bytes_sizing():
+    kv_per_tok = 114_688                     # llama32-3b
+    pool = PagedKVPool.from_bytes(28e9, kv_per_tok, page_size=16)
+    cap_tokens = pool.num_pages * pool.page_size
+    assert abs(cap_tokens - 28e9 / kv_per_tok) <= pool.page_size
+
+
+# ----------------------------------------------------------------------
+# property: any sequence of (alloc, free, evict) ops keeps the invariants
+# ----------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "evict"]),
+                          st.integers(0, 7),       # seq id
+                          st.integers(1, 120)),    # token count
+                min_size=1, max_size=60))
+def test_pool_invariants_hold(ops_list):
+    pool = PagedKVPool(num_pages=32, page_size=16)
+    for op, sid, tokens in ops_list:
+        if op == "alloc":
+            try:
+                pool.allocate(sid, tokens)
+            except OutOfPages:
+                pass
+        elif op == "free":
+            pool.free_seq(sid)
+        else:
+            pool.evict_lru()
+        pool.check_invariants()
+        assert 0 <= pool.used_pages <= pool.num_pages
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 64))
+def test_pages_for_is_ceiling(tokens, page_size):
+    pool = PagedKVPool(num_pages=1, page_size=page_size)
+    assert pool.pages_for(tokens) == -(-tokens // page_size)
+
+
+# ----------------------------------------------------------------------
+# device-backed pages: prefill scatter + paged attention == dense
+# ----------------------------------------------------------------------
+def test_device_paged_kv_roundtrip():
+    L, KV, hd, page = 2, 2, 32, 16
+    pool = PagedKVPool(num_pages=8, page_size=page)
+    dev = DevicePagedKV(pool, L, KV, hd, dtype=jnp.float32)
+    S = 40
+    ks = jax.random.normal(jax.random.PRNGKey(1), (L, S, KV, hd))
+    vs = jax.random.normal(jax.random.PRNGKey(2), (L, S, KV, hd))
+    pool.allocate(7, S)
+    dev.write_prefill(7, ks, vs)
+    k_back, v_back = dev.gather_dense(7)
+    np.testing.assert_array_equal(np.asarray(k_back), np.asarray(ks))
+    np.testing.assert_array_equal(np.asarray(v_back), np.asarray(vs))
+    # single-token append
+    k_tok = jax.random.normal(jax.random.PRNGKey(3), (L, KV, hd))
+    v_tok = jax.random.normal(jax.random.PRNGKey(4), (L, KV, hd))
+    pool.allocate(7, 1)
+    dev.write_token(7, k_tok, v_tok, S)
+    k_back, _ = dev.gather_dense(7)
+    np.testing.assert_array_equal(np.asarray(k_back[:, S]),
+                                  np.asarray(k_tok))
+
+
+def test_paged_attention_over_pool_matches_dense():
+    """Block-table attention over a REAL pool == dense cached attention."""
+    KV, hd, page, H = 2, 32, 16, 4
+    pool = PagedKVPool(num_pages=16, page_size=page)
+    dev = DevicePagedKV(pool, 1, KV, hd, dtype=jnp.float32)
+    lens = [37, 52]
+    for sid, S in enumerate(lens):
+        ks = jax.random.normal(jax.random.PRNGKey(10 + sid), (1, S, KV, hd))
+        vs = jax.random.normal(jax.random.PRNGKey(20 + sid), (1, S, KV, hd))
+        pool.allocate(sid, S)
+        dev.write_prefill(sid, ks, vs)
+    max_pages = max(len(pool.block_table(s)) for s in (0, 1))
+    bt = np.zeros((2, max_pages), np.int32)
+    for sid in (0, 1):
+        t = pool.block_table(sid)
+        bt[sid, :len(t)] = t
+    q = jax.random.normal(jax.random.PRNGKey(5), (2, H, hd))
+    out = ops.paged_attention(q, dev.k[0], dev.v[0], jnp.asarray(bt),
+                              jnp.asarray(lens, jnp.int32), backend="ref")
+    # compare against full attention over the densely gathered KV
+    for sid, S in enumerate(lens):
+        k_d, v_d = dev.gather_dense(sid)     # [1(L), S, KV, hd]
+        qg = q[sid].reshape(KV, H // KV, hd).astype(jnp.float32)
+        logits = jnp.einsum("kgd,tkd->kgt", qg,
+                            k_d[0].astype(jnp.float32)) / np.sqrt(hd)
+        probs = jax.nn.softmax(logits, axis=-1)
+        want = jnp.einsum("kgt,tkd->kgd", probs,
+                          v_d[0].astype(jnp.float32)).reshape(H, hd)
+        np.testing.assert_allclose(np.asarray(out[sid]), np.asarray(want),
+                                   atol=2e-4)
+
+
+def test_from_bytes_caps_pages_for_state_only_archs():
+    """kv_bytes_per_token == 0 (rwkv6) must not build a billion-entry
+    freelist (regression: launch.serve hung for attention-free archs)."""
+    pool = PagedKVPool.from_bytes(28e9, 0, page_size=16)
+    assert pool.num_pages == PagedKVPool.MAX_PAGES
+    pool.allocate(1, 100)
+    pool.check_invariants()

@@ -1,0 +1,94 @@
+"""Optimizer + data pipeline + training-loop substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, reduce_for_smoke
+from repro.train.data import SyntheticLM
+from repro.train.optimizer import (adamw, apply_updates, cosine_schedule,
+                                   global_norm)
+
+
+def test_adamw_minimizes_quadratic():
+    opt = adamw(0.1, weight_decay=0.0, grad_clip_norm=None)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.tree.map(lambda p: 2 * p, params)   # d/dp ||p||^2
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    opt = adamw(1.0, grad_clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    huge = {"w": jnp.full(4, 1e9)}
+    updates, state = opt.update(huge, state, params)
+    assert np.all(np.isfinite(np.asarray(updates["w"])))
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup_steps=10, total_steps=100,
+                         final_frac=0.1)
+    vals = [float(lr(jnp.asarray(s))) for s in (0, 5, 10, 55, 100)]
+    assert vals[0] == 0.0
+    assert vals[1] == pytest.approx(0.5)
+    assert vals[2] == pytest.approx(1.0)
+    assert 0.1 < vals[3] < 1.0
+    assert vals[4] == pytest.approx(0.1)
+
+
+def test_moments_are_f32_under_bf16_params():
+    opt = adamw(1e-3)
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state.m["w"].dtype == jnp.float32
+    assert state.v["w"].dtype == jnp.float32
+
+
+# ----------------------------------------------------------------------
+def test_data_cursor_determinism_and_resume():
+    cfg = reduce_for_smoke(REGISTRY["llama32-3b"])
+    a = SyntheticLM(cfg, 4, 32, seed=7)
+    stream = [a.next_batch() for _ in range(5)]
+    b = SyntheticLM(cfg, 4, 32, seed=7)
+    for _ in range(3):
+        b.next_batch()
+    c = SyntheticLM(cfg, 4, 32, seed=7)
+    c.restore(b.cursor.as_dict())
+    np.testing.assert_array_equal(c.next_batch()["tokens"],
+                                  stream[3]["tokens"])
+    np.testing.assert_array_equal(c.next_batch()["targets"],
+                                  stream[4]["targets"])
+
+
+def test_data_families_have_right_keys():
+    for arch in ("internvl2-2b", "seamless-m4t-medium", "llama32-3b"):
+        cfg = reduce_for_smoke(REGISTRY[arch])
+        d = SyntheticLM(cfg, 2, 32, seed=0)
+        batch = d.next_batch()
+        assert "tokens" in batch and "targets" in batch
+        if cfg.family == "vlm":
+            assert batch["patches"].shape[1] == cfg.vision.num_patches
+        if cfg.family == "encdec":
+            assert batch["src_embeds"].shape[1] == 32
+
+
+def test_training_reduces_loss():
+    """Steps on a tiny model over the learnable synthetic stream must
+    reduce loss measurably (deliverable b: end-to-end driver sanity)."""
+    from repro.launch.train import train
+    losses, wd = train("qwen2-0.5b", smoke=True, steps=40, batch_size=4,
+                       seq_len=32, verbose=False)
+    assert len(losses) == 40
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first - 0.05, f"loss did not improve: {first} -> {last}"

@@ -1,0 +1,76 @@
+"""Fast qualitative checks of the paper's findings on the simulator (the
+full quantitative reproduction lives in benchmarks/validate_claims.py)."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import Cluster, SETUPS, random_workload
+from repro.core.dvfs import sweep_frequencies
+
+
+CFG = get_config("llama32-3b")
+
+
+def _run(setup, bs, **kw):
+    reqs = random_workload(bs, input_len=16_384, output_len=256)
+    return Cluster(setup, CFG, **kw).run(reqs)
+
+
+@pytest.fixture(scope="module")
+def sweep16():
+    return {s: _run(s, 16) for s in SETUPS}
+
+
+def test_f1_co2gpus_best_ttft(sweep16):
+    co2 = sweep16["co-2gpus"].metrics.median_ttft_s
+    for s, res in sweep16.items():
+        if s != "co-2gpus":
+            assert co2 <= res.metrics.median_ttft_s + 1e-9, \
+                f"F1 violated by {s}"
+
+
+def test_f3_transfer_tier_ordering(sweep16):
+    ttft = {s: sweep16[s].metrics.median_ttft_s for s in sweep16}
+    assert ttft["dis-ici"] < ttft["dis-host"] < ttft["dis-disk"]
+    jt = {s: sweep16[s].joules_per_token for s in sweep16}
+    assert jt["dis-ici"] < jt["dis-host"] < jt["dis-disk"]
+
+
+def test_f2_colocated_tpot_cliff():
+    lo = _run("co-2gpus", 16).metrics
+    hi = _run("co-2gpus", 32).metrics
+    assert hi.median_tpot_s > 1.8 * lo.median_tpot_s, "no cliff at 32"
+    assert hi.total_recomputed_tokens > 0
+    # disaggregated decode must NOT cliff
+    dlo = _run("dis-ici", 16).metrics
+    dhi = _run("dis-ici", 32).metrics
+    assert dhi.median_tpot_s < 1.5 * dlo.median_tpot_s
+    assert dhi.total_recomputed_tokens == 0
+
+
+def test_f5_energy_amortizes_then_spikes():
+    e4 = _run("co-2gpus", 4).joules_per_token
+    e16 = _run("co-2gpus", 16).joules_per_token
+    e32 = _run("co-2gpus", 32).joules_per_token
+    assert e16 < e4                       # static amortization
+    assert e32 > e16                      # eviction spike
+
+
+def test_f6_no_dis_energy_win_at_batch16():
+    """Even with independent frequencies, dis can't beat co-2gpus energy
+    (paper takeaway 2) — checked on a coarse grid."""
+    grid = (0.42, 0.58, 0.74, 1.0)
+    wl = lambda: random_workload(16, input_len=16_384, output_len=256)
+    co = sweep_frequencies("co-2gpus", CFG, wl, freq_grid=grid)
+    dis = sweep_frequencies("dis-ici", CFG, wl, freq_grid=grid)
+    co_best = min(p.energy_j + d.energy_j for p, d in
+                  zip(co.prefill_points, co.decode_points))
+    dis_best = min(p.energy_j for p in dis.prefill_points) + \
+        min(d.energy_j for d in dis.decode_points)
+    assert co_best < dis_best
+
+
+def test_dis_tpot_beats_co_at_high_batch():
+    """Paper: at high batch, dis wins TPOT (co is churning)."""
+    co = _run("co-2gpus", 48).metrics.median_tpot_s
+    dis = _run("dis-ici", 48).metrics.median_tpot_s
+    assert dis < co

@@ -1,0 +1,82 @@
+"""Prefix matching + position-independent caching (paper section II-C)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prefix_cache import PrefixCache
+
+
+def test_exact_prefix_match():
+    c = PrefixCache(capacity_pages=64, page_size=4)
+    c.insert([1, 2, 3, 4, 5, 6, 7, 8])
+    r = c.lookup([1, 2, 3, 4, 5, 6, 7, 8, 9, 9])
+    assert r.matched_tokens == 8
+    assert r.recompute_tokens == 2
+    assert r.mode == "prefix"
+
+
+def test_prefix_diverges_early():
+    """Paper: prefix matching fails when openings differ."""
+    c = PrefixCache(capacity_pages=64, page_size=4)
+    c.insert([1, 2, 3, 4, 10, 11, 12, 13])
+    r = c.lookup([9, 2, 3, 4, 10, 11, 12, 13])   # first token differs
+    assert r.matched_tokens == 0
+    assert r.mode == "none"
+
+
+def test_pic_matches_displaced_content():
+    """PIC reuses the shared block even at a different position."""
+    shared = [10, 11, 12, 13, 14, 15, 16, 17]
+    c = PrefixCache(capacity_pages=64, page_size=4, pic=True,
+                    recompute_frac=0.25)
+    c.insert([1, 2, 3, 4] + shared)
+    r = c.lookup([9, 8, 7, 6] + shared + [5, 5, 5, 5])
+    assert r.matched_tokens == 8                 # the two shared pages
+    # recompute = unmatched (8) + repair fraction of matched (2)
+    assert r.recompute_tokens == 8 + 2
+    assert r.saved_tokens(16) == 6
+
+
+def test_pic_beats_prefix_on_rag_workload():
+    """RAG scenario: same documents, different user prompts."""
+    doc = list(range(100, 164))                  # 64-token shared doc
+    prefix = PrefixCache(1024, page_size=16)
+    pic = PrefixCache(1024, page_size=16, pic=True, recompute_frac=0.15)
+    for cache in (prefix, pic):
+        cache.insert([1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15,
+                      16] + doc)
+    query = [77] * 16 + doc     # different prompt, same doc
+    assert prefix.lookup(query).saved_tokens(len(query)) == 0
+    assert pic.lookup(query).saved_tokens(len(query)) > 40
+
+
+def test_lru_capacity_eviction():
+    c = PrefixCache(capacity_pages=2, page_size=4)
+    c.insert([1, 2, 3, 4])
+    c.insert([5, 6, 7, 8])
+    c.insert([9, 10, 11, 12])                    # evicts the oldest chain
+    assert c.lookup([1, 2, 3, 4]).matched_tokens == 0
+    assert c.lookup([9, 10, 11, 12]).matched_tokens == 4
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=0, max_size=64),
+       st.integers(2, 16))
+def test_insert_then_lookup_matches_all_full_pages(tokens, page_size):
+    c = PrefixCache(capacity_pages=128, page_size=page_size)
+    c.insert(tokens)
+    r = c.lookup(tokens)
+    full = (len(tokens) // page_size) * page_size
+    assert r.matched_tokens == full
+    assert r.recompute_tokens == len(tokens) - full
+    assert 0 <= r.matched_tokens <= len(tokens)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=0, max_size=64))
+def test_lookup_never_exceeds_input(tokens):
+    c = PrefixCache(capacity_pages=128, page_size=8, pic=True)
+    c.insert(tokens)
+    r = c.lookup(tokens)
+    assert r.matched_tokens <= len(tokens)
+    assert r.recompute_tokens >= 0
