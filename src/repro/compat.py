@@ -1,0 +1,30 @@
+"""JAX version compatibility shims.
+
+The distribution subsystem (``repro.dist``) targets the current jax API
+(``jax.shard_map``, ``AbstractMesh(axis_sizes, axis_names)``); the pinned
+container ships jax 0.4.37 where ``shard_map`` still lives under
+``jax.experimental`` and ``AbstractMesh`` takes a ``((name, size), ...)``
+shape tuple. Everything that is version-sensitive is funneled through this
+module so the rest of the codebase (and the tests) can write against one
+surface.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+from jax.sharding import AbstractMesh
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def abstract_mesh(axis_sizes: Sequence[int],
+                  axis_names: Tuple[str, ...]) -> AbstractMesh:
+    """``AbstractMesh((16, 16), ("data", "model"))`` on every jax version."""
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:  # jax <= 0.4.x: shape_tuple of (name, size) pairs
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))

@@ -1,0 +1,25 @@
+"""Distribution subsystem: how the reproduction scales past one chip.
+
+The serving core (``repro.core``) measures the paper's five setups on a
+cost model; this package is what makes the same models *actually place* on
+production meshes — the single-pod 16x16 and the multi-pod 2x16x16 that
+``repro.launch.dryrun`` lowers and compiles against (DESIGN.md section 6).
+Disaggregation at pod scale is a placement problem: prefill and decode
+stages run the SAME parameter layout but different batch/state layouts,
+and every piece of that story lives here:
+
+  sharding      PartitionSpec rules for params / batches / decode state —
+                the per-stage layouts DistServe-style placement needs.
+  opt_flags     named, globally-registered perf optimizations so a flag
+                set can be A/B'd through one re-lowering
+                (``benchmarks.perf_iterate``).
+  collectives   shard_map-level building blocks (ring passes, halo
+                exchange, bucketed / int8-compressed all-reduce).
+  fault         atomic checkpoints + straggler watchdog for the training
+                path (DESIGN.md section 7).
+  hlo_analysis  parse compiled HLO into roofline terms — the evidence the
+                dry-run proof and the perf loop read.
+"""
+from . import collectives, fault, hlo_analysis, opt_flags, sharding
+
+__all__ = ["collectives", "fault", "hlo_analysis", "opt_flags", "sharding"]

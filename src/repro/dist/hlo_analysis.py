@@ -1,0 +1,254 @@
+"""HLO-derived evidence: collective traffic + roofline terms.
+
+The multi-pod dry run (``repro.launch.dryrun``) proves a distribution
+config by lowering and compiling it; this module turns the compiled
+artifact into numbers (DESIGN.md sections 2 and 6): ``collective_stats``
+parses the collective ops (and their payload bytes) out of HLO text,
+``cost_numbers`` reads XLA's cost analysis, and ``RooflineTerms`` combines
+them into the three-term step-time model
+
+    step = max(compute, memory, collective)
+
+that ``benchmarks.roofline`` tabulates and ``benchmarks.perf_iterate``
+diffs across perf-flag sets. Because XLA counts a while-loop body once,
+whole-model numbers come from two small fully-unrolled lowerings and
+``linear_extrapolate`` (layer stacks are homogeneous: cost(L) = a + b*L).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.core.costs import ChipSpec
+
+_CHIP = ChipSpec()
+PEAK_FLOPS = _CHIP.peak_flops                       # bf16 FLOP/s per chip
+HBM_BW = _CHIP.hbm_bw                               # B/s per chip
+ICI_BW = _CHIP.ici_bw_per_link * _CHIP.ici_links    # B/s per chip
+
+# ----------------------------------------------------------------------
+# HLO collective parsing
+# ----------------------------------------------------------------------
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+          "collective-permute", "all-to-all")
+
+# "%x = TYPE kind(...)" where TYPE is "bf16[8,16,128]{2,1,0}" or a tuple.
+# Async pairs: count the -start, skip the -done (it is the same transfer).
+_INSTR_RE = re.compile(
+    r"=\s*(?P<ty>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<kind>" + "|".join(_KINDS) + r")(?P<suffix>-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes_list(ty: str) -> list:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(ty):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append(n * _DTYPE_BYTES.get(dtype, 2))
+    return out
+
+
+@dataclass
+class CollectiveStats:
+    """Collective op counts and payload bytes parsed from one HLO module."""
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Parse all-gather / all-reduce / reduce-scatter / collective-permute
+    / all-to-all instructions (sync or async ``-start``) and sum their
+    result-shape bytes per kind."""
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if m is None or m.group("suffix") == "-done":
+            continue
+        kind = m.group("kind")
+        shapes = _shape_bytes_list(m.group("ty"))
+        # async '-start' ops are tuple-typed (operand, result, ...): the
+        # transfer is the result, so take the largest element, not the
+        # sum — summing would double-count the aliased input shard.
+        # Sync tuple types (all-to-all) really are multiple outputs.
+        if m.group("suffix") == "-start" and m.group("ty").startswith("("):
+            payload = max(shapes) if shapes else 0
+        else:
+            payload = sum(shapes)
+        st.count_by_kind[kind] = st.count_by_kind.get(kind, 0) + 1
+        st.bytes_by_kind[kind] = st.bytes_by_kind.get(kind, 0) + payload
+    return st
+
+
+# ----------------------------------------------------------------------
+# compiled-artifact cost numbers + extrapolation
+# ----------------------------------------------------------------------
+def cost_numbers(compiled) -> Tuple[float, float]:
+    """(flops, bytes_accessed) from a compiled executable's cost analysis
+    (per-device numbers under SPMD)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def linear_extrapolate(y1: float, y2: float, n1: float, n2: float,
+                       n: float) -> float:
+    """Exact extrapolation of cost(L) = a + b*L from two measured sizes."""
+    slope = (y2 - y1) / (n2 - n1)
+    return y1 + slope * (n - n1)
+
+
+# ----------------------------------------------------------------------
+# three-term roofline
+# ----------------------------------------------------------------------
+@dataclass
+class RooflineTerms:
+    """Per-chip roofline for one compiled step.
+
+    ``flops`` / ``hbm_bytes`` / ``collective_bytes`` are per-device
+    numbers (XLA cost analysis of the SPMD module);
+    ``vmem_resident_bytes`` is traffic the Pallas kernels keep on-chip
+    and is credited against the HBM term; ``model_flops`` (the 6ND /
+    2ND ideal) gives the useful-FLOPs ratio.
+    """
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    n_chips: int
+    model_flops: float = 0.0
+    vmem_resident_bytes: float = 0.0
+    memory_floor_bytes: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s_raw(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def memory_s(self) -> float:
+        return max(self.hbm_bytes - self.vmem_resident_bytes, 0.0) / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops > 0 else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "n_chips": self.n_chips,
+            "model_flops": self.model_flops,
+            "vmem_resident_bytes": self.vmem_resident_bytes,
+            "memory_floor_bytes": self.memory_floor_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "memory_s_raw": self.memory_s_raw,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+# ----------------------------------------------------------------------
+# model-derived ideals (per chip)
+# ----------------------------------------------------------------------
+def _tokens(shape: InputShape) -> int:
+    if shape.kind in ("train", "prefill"):
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch  # decode: one new token per sequence
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape, n_chips: int) -> float:
+    """The 6ND (train) / 2ND (forward-only) ideal, per chip, on ACTIVE
+    params — the MoE useful-work denominator, not the parameter count."""
+    n_active = cfg.param_count(active_only=True)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n_active * _tokens(shape) / n_chips
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.hybrid.shared_attn_every
+    if cfg.family == "encdec":
+        return cfg.encdec.num_decoder_layers
+    return cfg.num_layers
+
+
+def vmem_resident_traffic(cfg: ModelConfig, shape: InputShape,
+                          n_chips: int) -> float:
+    """Bytes the fused Pallas kernels keep VMEM-resident that XLA's cost
+    analysis charges to HBM: attention logits+probs (flash attention never
+    materializes them) and the recurrent scan-state stream (rwkv6/mamba2
+    keep the running state on-chip across the chunk). Per chip."""
+    B, S = shape.global_batch, shape.seq_len
+    total = 0.0
+    la = _attn_layers(cfg)
+    if la:
+        if shape.kind == "decode":
+            pair_elems = B * cfg.num_heads * S           # one query row
+        else:
+            pair_elems = B * cfg.num_heads * S * S / 2   # causal half
+        total += 2 * 4.0 * la * pair_elems               # logits + probs, f32
+    state = cfg.state_bytes()
+    if state:
+        steps = 1 if shape.kind == "decode" else S
+        total += 2.0 * state * B * steps / max(
+            1, getattr(cfg.ssm, "chunk_size", 1) if cfg.ssm else 1)
+    return total / n_chips
+
+
+def structural_memory_floor(cfg: ModelConfig, shape: InputShape,
+                            n_chips: int) -> float:
+    """Bytes this cell cannot avoid holding per chip: bf16 weights (fully
+    sharded), the batch's KV/recurrent state, and the token buffers. The
+    sanity line the dry-run's memory_analysis is compared against."""
+    B, S = shape.global_batch, shape.seq_len
+    params = 2.0 * cfg.param_count()
+    kv = (cfg.kv_bytes_per_token() * S + cfg.state_bytes()) * B
+    tokens = 4.0 * B * (S if shape.kind != "decode" else 1)
+    return (params + kv + tokens) / n_chips

@@ -1,0 +1,75 @@
+"""Global perf-flag registry for the optimization iteration loop.
+
+Disaggregated serving tunes prefill and decode *independently*; each named
+flag here is one such tuning lever, applied process-wide so a single
+re-lowering (``benchmarks.perf_iterate`` / ``repro.launch.dryrun``) can
+A/B a flag set against the baseline without touching model code. Flags are
+consumed at trace time by ``repro.models.layers`` / ``repro.models.moe``
+and by the sharding rules (``repro.dist.sharding``); every flag must be
+output-preserving — ``tests/test_opt_flags.py`` asserts forward/grad
+equivalence for each.
+
+Subprocess harnesses pass a flag set through the ``REPRO_OPT`` environment
+variable (read once at import).
+"""
+from __future__ import annotations
+
+import os
+from typing import FrozenSet, Tuple
+
+# name -> what it changes (the registry IS the documentation the perf log
+# references; unknown names are rejected so a typo'd experiment cannot
+# silently measure the baseline).
+FLAGS = {
+    "remat_dots": (
+        "activation-checkpoint policy saves matmul outputs (XLA "
+        "dots-saveable) instead of recomputing them in backward"),
+    "bf16_logits": (
+        "keep the LM-head matmul and logits tensor in bf16; softmax/loss "
+        "still upcast to f32"),
+    "seq_shard_kv": (
+        "shard the KV cache on the sequence axis over 'model' instead of "
+        "the head axis (decode-state resharding lever)"),
+    "local_moe_dispatch": (
+        "MoE sort/rank/scatter per data-shard-sized token group instead "
+        "of one global sort; only the expert einsum crosses shards"),
+    "masked_cache_update": (
+        "decode KV write as an elementwise select over the sequence dim "
+        "instead of a scatter (partitions cleanly under SPMD)"),
+    "pad_heads": (
+        "GQA head regrouping: duplicate kv heads so the q-head dim "
+        "divides the model axis (bit-exact, enables head sharding)"),
+    "head_shard_attn": (
+        "constrain attention q/k/v head dims to 'model' when divisible"),
+}
+
+_active: FrozenSet[str] = frozenset()
+
+
+def set_flags(csv: str) -> None:
+    """Replace the active set with a comma-separated flag list ('' clears).
+
+    Raises ``ValueError`` on any unknown name.
+    """
+    global _active
+    names = [n.strip() for n in csv.split(",") if n.strip()]
+    unknown = [n for n in names if n not in FLAGS]
+    if unknown:
+        raise ValueError(
+            f"unknown perf flag(s) {unknown}; known: {sorted(FLAGS)}")
+    _active = frozenset(names)
+
+
+def enabled(name: str) -> bool:
+    if name not in FLAGS:
+        raise ValueError(f"unknown perf flag {name!r}; known: {sorted(FLAGS)}")
+    return name in _active
+
+
+def active() -> Tuple[str, ...]:
+    """Currently enabled flags, sorted (falsy when none are set)."""
+    return tuple(sorted(_active))
+
+
+# subprocess harnesses (perf_iterate) hand the flag set down via env
+set_flags(os.environ.get("REPRO_OPT", ""))

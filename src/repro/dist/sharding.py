@@ -1,0 +1,221 @@
+"""Sharding rules: legal PartitionSpecs for every arch on every mesh.
+
+This is the placement half of the disaggregation story (DESIGN.md
+sections 5-6): parameters get a tensor-parallel layout over the 'model'
+axis (replicated across 'data'/'pod'), batches shard over the data axes,
+and the decode state — the KV cache the paper transfers between stages —
+gets its own rules, including the ``seq_shard_kv`` resharding lever.
+Prefill and decode engines therefore share one parameter layout while
+their activation/state layouts differ, which is exactly what pod-level
+prefill/decode placement needs.
+
+Every rule is divisibility-checked against the actual mesh axis sizes and
+falls back along a fixed chain that ends fully replicated — an arch whose
+dims don't divide the mesh still lowers, it just shards less
+(``tests/test_sharding.py`` asserts legality for every registered arch on
+both production meshes).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist import opt_flags
+
+MODEL_AXIS = "model"
+# data-parallel axes in outer-to-inner order; 'pod' exists on the
+# multi-pod mesh only (cross-pod DP, or pod-level prefill/decode split).
+_DATA_AXIS_ORDER = ("pod", "data")
+
+
+# ----------------------------------------------------------------------
+# mesh introspection (works for Mesh and AbstractMesh alike)
+# ----------------------------------------------------------------------
+def _axis_sizes(mesh) -> Dict[str, int]:
+    return dict(mesh.shape)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axis names present on this mesh, outer first."""
+    sizes = _axis_sizes(mesh)
+    return tuple(a for a in _DATA_AXIS_ORDER if a in sizes)
+
+
+def _data_size(mesh) -> int:
+    sizes = _axis_sizes(mesh)
+    return math.prod(sizes[a] for a in data_axes(mesh)) or 1
+
+
+def _model_size(mesh) -> int:
+    return _axis_sizes(mesh).get(MODEL_AXIS, 1)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ----------------------------------------------------------------------
+# parameters
+# ----------------------------------------------------------------------
+def _is_norm(name: str) -> bool:
+    return "norm" in name or name.startswith("ln_")
+
+
+def _is_stacked(parts: Sequence[str]) -> bool:
+    """Leading [num_layers] axis from a vmapped per-layer init?"""
+    return any(p.endswith("layers") or p in ("encoder", "decoder")
+               for p in parts[:-1])
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh,
+               cfg: ModelConfig) -> P:
+    """Tensor-parallel spec for one parameter.
+
+    Rules, in order:
+      1. norm scales/biases replicate (tiny, and TP-summed activations
+         need them whole on every shard);
+      2. stacked MoE expert weights [L, E, d, f] shard the expert axis —
+         expert parallelism keeps each expert's matmul local;
+      3. otherwise the largest 'model'-divisible dim is sharded
+         (later dim wins ties -> column-parallel for square weights;
+         vocab-parallel embeddings when the vocab divides, d_model
+         fallback when it does not);
+      4. nothing divides -> fully replicated.
+    """
+    parts = path.split("/")
+    ndim = len(shape)
+    spec = [None] * ndim
+    if _is_norm(parts[-1]):
+        return P(*spec)
+
+    tp = _model_size(mesh)
+    if "moe_layers" in parts and ndim == 4 and shape[1] % tp == 0:
+        spec[1] = MODEL_AXIS
+        return P(*spec)
+
+    start = 1 if (_is_stacked(parts) and ndim > 1) else 0
+    candidates = [d for d in range(start, ndim)
+                  if shape[d] > 1 and shape[d] % tp == 0]
+    if candidates:
+        best = max(candidates, key=lambda d: (shape[d], d))
+        spec[best] = MODEL_AXIS
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def param_shardings(cfg: ModelConfig, abstract_params: Any, mesh) -> Any:
+    """NamedSharding pytree matching ``abstract_params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    out = [NamedSharding(mesh, param_spec(_path_str(path), leaf.shape,
+                                          mesh, cfg))
+           for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ----------------------------------------------------------------------
+# batches
+# ----------------------------------------------------------------------
+def batch_spec(shape: Tuple[int, ...], mesh) -> P:
+    """Batch tensors shard dim 0 over ALL data axes (pod included), with
+    a fallback to 'data' alone, then replicated (long_500k's batch of 1
+    can never shard)."""
+    spec = [None] * len(shape)
+    if not shape:
+        return P(*spec)
+    dax = data_axes(mesh)
+    sizes = _axis_sizes(mesh)
+    if dax and shape[0] % math.prod(sizes[a] for a in dax) == 0:
+        spec[0] = dax
+    elif "data" in sizes and shape[0] % sizes["data"] == 0:
+        spec[0] = ("data",)
+    return P(*spec)
+
+
+def batch_shardings(abstract_batch: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, batch_spec(l.shape, mesh)),
+        abstract_batch)
+
+
+# ----------------------------------------------------------------------
+# decode state (KV caches / recurrent states)
+# ----------------------------------------------------------------------
+def state_spec(shape: Tuple[int, ...], mesh) -> P:
+    """Decode-state layout. Leaves follow the repo conventions
+    [L, B, ...feature dims]: batch shards over the data axes and the
+    trailing feature dim (head_dim, or the kv-head dim when head_dim
+    doesn't divide) shards over 'model'.
+
+    With the ``seq_shard_kv`` perf flag, 5-D KV caches [L, B, S, KV, hd]
+    shard the SEQUENCE axis on 'model' instead — the decode-state
+    resharding lever the roofline's collective term responds to.
+    Recurrent (<=4-D) states are unaffected by the flag.
+    """
+    ndim = len(shape)
+    spec = [None] * ndim
+    if ndim < 2:
+        return P(*spec)
+    dax = data_axes(mesh)
+    sizes = _axis_sizes(mesh)
+    if dax and shape[1] % _data_size(mesh) == 0:
+        spec[1] = dax
+    elif "data" in sizes and shape[1] % sizes["data"] == 0:
+        # same fallback chain as batch_spec: a batch that divides 'data'
+        # but not pod*data must still give batch and state ONE layout
+        spec[1] = ("data",)
+    tp = _model_size(mesh)
+    if (ndim == 5 and opt_flags.enabled("seq_shard_kv")
+            and shape[2] % tp == 0):
+        spec[2] = MODEL_AXIS
+        return P(*spec)
+    for d in (ndim - 1, ndim - 2):
+        if d <= 1:
+            break
+        if shape[d] % tp == 0 and shape[d] > 1:
+            spec[d] = MODEL_AXIS
+            break
+    return P(*spec)
+
+
+def state_shardings(abstract_state: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, state_spec(l.shape, mesh)),
+        abstract_state)
+
+
+# ----------------------------------------------------------------------
+# optimizer state (ZeRO over data on top of the TP layout)
+# ----------------------------------------------------------------------
+def opt_state_shardings(param_sh: Any, abstract_params: Any, mesh) -> Any:
+    """AdamW moments: take each parameter's TP spec and additionally shard
+    the first free divisible dim over the data axes (ZeRO-1 style) — f32
+    m+v replicated over 256 chips would not fit HBM for the 34B archs."""
+    dax = data_axes(mesh)
+    dsize = _data_size(mesh)
+
+    def one(sh: NamedSharding, leaf) -> NamedSharding:
+        spec = list(sh.spec) + [None] * (len(leaf.shape) - len(sh.spec))
+        if dax:
+            for d, entry in enumerate(spec):
+                if entry is None and leaf.shape[d] > 1 \
+                        and leaf.shape[d] % dsize == 0:
+                    spec[d] = dax
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, param_sh, abstract_params)

@@ -124,12 +124,16 @@ def moe_ffn(p: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig,
                 break
     if groups > 1:
         xg = xt.reshape(groups, T // groups, d)
-        y, aux = jax.vmap(
+        y, counts, frac_probs = jax.vmap(
             lambda xs: _dispatch(p, xs, cfg, dropless))(xg)
         y = y.reshape(T, d)
-        aux = jnp.mean(aux)
+        # aux loss from GLOBAL routing stats: summed counts and averaged
+        # probs reproduce the ungrouped Switch loss (a mean of per-group
+        # losses would not — f_e * P_e is quadratic in the stats)
+        aux = _aux_loss(jnp.sum(counts, 0), jnp.mean(frac_probs, 0), cfg, T)
     else:
-        y, aux = _dispatch(p, xt, cfg, dropless)
+        y, counts, frac_probs = _dispatch(p, xt, cfg, dropless)
+        aux = _aux_loss(counts, frac_probs, cfg, T)
 
     if m.num_shared_experts:
         s = p["shared"]
@@ -140,9 +144,21 @@ def moe_ffn(p: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig,
     return y.reshape(*lead, d).astype(x.dtype), aux
 
 
-def _dispatch(p, xt: jnp.ndarray, cfg: ModelConfig,
-              dropless: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Core sort+scatter dispatch over one token group. xt: [T, d]."""
+def _aux_loss(counts: jnp.ndarray, frac_probs: jnp.ndarray,
+              cfg: ModelConfig, total_tokens: int) -> jnp.ndarray:
+    """Switch load-balance loss E * sum f_e * P_e from routing stats."""
+    m = cfg.moe
+    frac_tokens = counts / (total_tokens * m.top_k)
+    return (m.num_experts * jnp.sum(frac_tokens * frac_probs)
+            * m.router_aux_loss)
+
+
+def _dispatch(p, xt: jnp.ndarray, cfg: ModelConfig, dropless: bool
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Core sort+scatter dispatch over one token group. xt: [T, d].
+
+    Returns (y, expert_counts, mean_probs); the caller assembles the aux
+    loss so grouped dispatch can combine stats globally first."""
     m = cfg.moe
     E, K = m.num_experts, m.top_k
     T, d = xt.shape
@@ -153,11 +169,9 @@ def _dispatch(p, xt: jnp.ndarray, cfg: ModelConfig,
     weight = weight / jnp.maximum(
         jnp.sum(weight, axis=-1, keepdims=True), 1e-9)          # renormalize
 
-    # --- load-balance auxiliary loss (Switch form: E * sum f_e * P_e) ---
+    # routing stats for the load-balance loss (assembled by the caller)
     counts = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0)
-    frac_tokens = counts / (T * K)
     frac_probs = jnp.mean(probs, axis=0)
-    aux = E * jnp.sum(frac_tokens * frac_probs) * m.router_aux_loss
 
     # --- sort slots by expert; rank within expert run ---
     S = T * K
@@ -192,7 +206,7 @@ def _dispatch(p, xt: jnp.ndarray, cfg: ModelConfig,
     back = jnp.where(keep[:, None], ye[jnp.minimum(dest, E * C - 1)], 0.0)
     contrib = back * flat_w[order][:, None].astype(back.dtype)
     y = jnp.zeros((T, d), back.dtype).at[flat_t[order]].add(contrib)
-    return y, aux
+    return y, counts, frac_probs
 
 
 # ----------------------------------------------------------------------

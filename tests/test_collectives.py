@@ -16,8 +16,9 @@ _WORKER = textwrap.dedent("""
     import jax
     import jax.numpy as jnp
     import numpy as np
-    shard_map = jax.shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     from repro.dist.collectives import (bucketed_psum, compressed_psum,
                                         halo_exchange, ring_allgather,

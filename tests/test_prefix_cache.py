@@ -1,7 +1,7 @@
 """Prefix matching + position-independent caching (paper section II-C)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.prefix_cache import PrefixCache
 
