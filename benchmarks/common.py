@@ -18,9 +18,13 @@ ARCH = os.environ.get("REPRO_BENCH_ARCH", "llama32-3b")
 BATCHES = (2, 4, 8, 16, 32, 48, 64)
 INPUT_LEN = 16_384
 OUTPUT_LEN = 256
+# open-loop mode (--rate): Poisson arrivals over the same paper shape
+RATES = (1.0, 2.0, 4.0, 8.0, 16.0)
+OPEN_LOOP_N = 24
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 
 _CACHE: Dict[Tuple[str, str, int], SetupResult] = {}
+_RATE_CACHE: Dict[Tuple[str, str, float, int, int], SetupResult] = {}
 
 
 def run_point(setup: str, batch: int, arch: str = ARCH,
@@ -37,6 +41,36 @@ def run_point(setup: str, batch: int, arch: str = ARCH,
                                output_len=OUTPUT_LEN)
         return Cluster(setup, cfg, **kw).run(reqs)
     return _CACHE[key]
+
+
+def run_open_loop_point(setup: str, rate: float, arch: str = ARCH,
+                        n: int = OPEN_LOOP_N, seed: int = 0) -> SetupResult:
+    """One open-loop cell: Poisson arrivals at ``rate`` req/s over the
+    paper's fixed 16k/256 shape, scored against the shared interactive
+    SLO so goodput/attainment columns are meaningful (cached like
+    ``run_point``)."""
+    from repro.workload import DEFAULT_INTERACTIVE_SLO, open_loop_workload
+    key = (arch, setup, float(rate), n, seed)
+    if key not in _RATE_CACHE:
+        cfg = get_config(arch)
+        reqs = open_loop_workload(rate, n, seed=seed,
+                                  slo=DEFAULT_INTERACTIVE_SLO,
+                                  lengths=None)  # paper-fixed 16k/256
+        _RATE_CACHE[key] = Cluster(setup, cfg).run(reqs)
+    return _RATE_CACHE[key]
+
+
+def open_loop_arg_parser(doc: str) -> "argparse.ArgumentParser":
+    """The --arch/--rate/--requests parser shared by the open-loop
+    figures (fig1/fig2/fig6) so new knobs land in one place."""
+    import argparse
+    ap = argparse.ArgumentParser(description=doc)
+    ap.add_argument("--arch", default=ARCH)
+    ap.add_argument("--rate", type=float, action="append", default=None,
+                    help="open-loop offered rate (repeatable); omit for "
+                         "the paper's batch sweep where applicable")
+    ap.add_argument("--requests", type=int, default=OPEN_LOOP_N)
+    return ap
 
 
 def full_sweep(arch: str = ARCH,

@@ -1,4 +1,13 @@
-"""Paper Fig 1: TTFT and TPOT vs batch size across the five setups."""
+"""Paper Fig 1: TTFT and TPOT vs batch size across the five setups.
+
+``--rate`` switches the x-axis from batch size (the paper's infinite-
+rate RandomDataset) to offered load: Poisson arrivals at each requested
+rate over the same 16k/256 shape, reporting SLO-era open-loop metrics
+(queue delay, attainment-ready percentiles).
+
+  python -m benchmarks.fig1_latency                  # batch sweep
+  python -m benchmarks.fig1_latency --rate 2 --rate 8
+"""
 from __future__ import annotations
 
 from repro.core import SETUPS
@@ -23,5 +32,31 @@ def run(arch: str = common.ARCH):
     return rows
 
 
+def run_rates(rates, arch: str = common.ARCH, n: int = common.OPEN_LOOP_N):
+    header = ["setup", "rate_rps", "median_ttft_s", "p99_ttft_s",
+              "median_tpot_ms", "p99_tpot_ms", "median_queue_s",
+              "evictions"]
+    rows = []
+    for setup in SETUPS:
+        for rate in rates:
+            m = common.run_open_loop_point(setup, rate, arch, n=n).metrics
+            rows.append([setup, rate, round(m.median_ttft_s, 4),
+                         round(m.p99_ttft_s, 4),
+                         round(m.median_tpot_s * 1e3, 3),
+                         round(m.p99_tpot_s * 1e3, 3),
+                         round(m.median_queue_s, 4), m.total_evictions])
+    common.print_table("Fig 1 (open loop): latency vs offered rate",
+                       header, rows)
+    common.write_csv("fig1_latency_rate.csv", header, rows)
+    return rows
+
+
+def main(argv=None):
+    args = common.open_loop_arg_parser(__doc__).parse_args(argv)
+    if args.rate:
+        return run_rates(args.rate, args.arch, n=args.requests)
+    return run(args.arch)
+
+
 if __name__ == "__main__":
-    run()
+    main()

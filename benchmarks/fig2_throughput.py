@@ -1,4 +1,13 @@
-"""Paper Fig 2: prefill and decode throughput vs batch size."""
+"""Paper Fig 2: prefill and decode throughput vs batch size.
+
+``--rate`` switches to the open-loop axis: throughput plus goodput
+(requests/s meeting the shared interactive SLO — TTFT<=2s, TPOT<=7.5ms,
+``repro.workload.DEFAULT_INTERACTIVE_SLO``) at each offered Poisson
+rate.
+
+  python -m benchmarks.fig2_throughput
+  python -m benchmarks.fig2_throughput --rate 2 --rate 8
+"""
 from __future__ import annotations
 
 from repro.core import SETUPS
@@ -21,5 +30,30 @@ def run(arch: str = common.ARCH):
     return rows
 
 
+def run_rates(rates, arch: str = common.ARCH, n: int = common.OPEN_LOOP_N):
+    header = ["setup", "rate_rps", "offered_rps", "prefill_tput_tok_s",
+              "decode_tput_tok_s", "goodput_rps", "makespan_s"]
+    rows = []
+    for setup in SETUPS:
+        for rate in rates:
+            m = common.run_open_loop_point(setup, rate, arch, n=n).metrics
+            rows.append([setup, rate, round(m.offered_rps, 3),
+                         round(m.prefill_throughput_tok_s, 1),
+                         round(m.decode_throughput_tok_s, 1),
+                         round(m.goodput_rps, 3),
+                         round(m.makespan_s, 2)])
+    common.print_table("Fig 2 (open loop): throughput vs offered rate",
+                       header, rows)
+    common.write_csv("fig2_throughput_rate.csv", header, rows)
+    return rows
+
+
+def main(argv=None):
+    args = common.open_loop_arg_parser(__doc__).parse_args(argv)
+    if args.rate:
+        return run_rates(args.rate, args.arch, n=args.requests)
+    return run(args.arch)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,0 +1,102 @@
+"""Fig 6 (new): SLO-goodput vs offered load and the crossover rates.
+
+The paper's central caveat quantified: sweep offered Poisson rate x
+setup (the three dis-* rows are the KV transfer media), score each cell
+with DistServe-style goodput (requests/s meeting BOTH the TTFT and TPOT
+SLO), then bisect for each dis-* setup's *crossover load* against the
+equal-resource co-2gpus baseline. On this cost model colocation wins
+below the crossover (no interference to avoid, so the KV handoff is
+pure overhead) and disaggregation wins above it (prefill-priority
+stalls + preemption churn); slower media push the crossover up —
+dis-disk typically never crosses.
+
+  python -m benchmarks.fig6_load_crossover            # full grid
+  python -m benchmarks.fig6_load_crossover --smoke    # CI: tiny grid + JSON
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import get_config
+from repro.core import SLO
+from repro.workload import (DEFAULT_INTERACTIVE_SLO, RatePoint,
+                            crossover_rate, rate_grid)
+
+from . import common
+
+DIS_SETUPS = ("dis-ici", "dis-host", "dis-disk")
+DEFAULT_SLO = DEFAULT_INTERACTIVE_SLO
+
+
+def run(arch: str = common.ARCH, *, rates=None, n: int = common.OPEN_LOOP_N,
+        slo: SLO = DEFAULT_SLO, smoke: bool = False, seed: int = 0):
+    cfg = get_config(arch)
+    if rates is None:
+        rates = (1.0, 2.0, 4.0) if smoke else (1.0, 2.0, 3.0, 4.0, 6.0,
+                                               8.0, 12.0, 16.0, 24.0)
+    setups = ("co-2gpus",) + DIS_SETUPS
+    points = rate_grid(cfg, rates, setups=setups, slo=slo, n=n, seed=seed)
+    rows = [p.as_row() for p in points]
+    common.print_table("Fig 6: SLO goodput vs offered load",
+                       RatePoint.ROW_HEADER, rows)
+    common.write_csv("fig6_load_crossover.csv", RatePoint.ROW_HEADER, rows)
+
+    lo, hi = min(rates), max(rates)
+    iters = 2 if smoke else 5
+    # seed the bisection cache with the grid cells already simulated;
+    # the co-2gpus baseline is then shared across all three dis sweeps
+    cache = {(p.setup, p.rate): p.goodput_rps for p in points}
+    crossovers = {}
+    for setup in DIS_SETUPS:
+        if lo >= hi:
+            print(f"{setup}: need >= 2 distinct rates to bracket a "
+                  f"crossover (got {sorted(set(rates))})")
+            crossovers[setup] = None
+            continue
+        c = crossover_rate(setup, cfg, baseline="co-2gpus", lo=lo, hi=hi,
+                           iters=iters, cache=cache, slo=slo, n=n,
+                           seed=seed)
+        crossovers[setup] = (None if c is None else
+                             {"rate_rps": round(c.rate, 3),
+                              "winner_below": c.winner_below,
+                              "winner_above": c.winner_above})
+        if c is None:
+            print(f"{setup}: no goodput crossover vs co-2gpus in "
+                  f"[{lo}, {hi}] req/s")
+        else:
+            print(f"{setup}: goodput crossover vs co-2gpus at "
+                  f"~{c.rate:.2f} req/s ({c.winner_below} wins below, "
+                  f"{c.winner_above} above)")
+
+    payload = {
+        "arch": arch, "n_requests": n, "seed": seed,
+        "slo": {"ttft_s": slo.ttft_s, "tpot_s": slo.tpot_s},
+        "rates_rps": list(rates),
+        "points": [dict(zip(RatePoint.ROW_HEADER, r)) for r in rows],
+        "crossovers": crossovers,
+    }
+    os.makedirs(common.OUT_DIR, exist_ok=True)
+    json_path = os.path.join(common.OUT_DIR, "fig6_load_crossover.json")
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {json_path}")
+    return payload
+
+
+def main(argv=None):
+    ap = common.open_loop_arg_parser(__doc__)
+    ap.add_argument("--ttft-slo", type=float, default=DEFAULT_SLO.ttft_s)
+    ap.add_argument("--tpot-slo", type=float, default=DEFAULT_SLO.tpot_s)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI; emits the same JSON artifact")
+    args = ap.parse_args(argv)
+    run(args.arch, rates=args.rate, n=args.requests,
+        slo=SLO(ttft_s=args.ttft_slo, tpot_s=args.tpot_slo),
+        smoke=args.smoke, seed=args.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -11,8 +11,8 @@ import sys
 import time
 
 from . import (common, fig1_latency, fig2_throughput, fig3_energy,
-               fig4_breakdown, fig5_pareto, reuse_bench, roofline,
-               validate_claims)
+               fig4_breakdown, fig5_pareto, fig6_load_crossover,
+               reuse_bench, roofline, validate_claims)
 
 
 def main(argv=None) -> int:
@@ -34,6 +34,7 @@ def main(argv=None) -> int:
     fig4_breakdown.run(args.arch)
     if not args.skip_pareto:
         fig5_pareto.run(args.arch)
+    fig6_load_crossover.run(args.arch, smoke=args.quick)
     reuse_bench.run()
     failures = validate_claims.run()
     try:

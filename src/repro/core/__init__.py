@@ -10,7 +10,8 @@ from .engine import Engine, RealExecutor
 from .kvcache import DevicePagedKV, OutOfPages, PagedKVPool
 from .orchestrator import SETUPS, Cluster, SetupResult, run_setup
 from .prefix_cache import PrefixCache, ReuseResult
-from .request import Request, SLO, WorkloadMetrics, random_workload, summarize
+from .request import Request, SLO, WorkloadMetrics, meets_slo, \
+    random_workload, summarize
 from .transfer import DiskPath, HostPath, ICIPath, TransferPath, make_path
 from .dvfs import FrequencySweep, best_total_energy, sweep_frequencies
 
@@ -20,7 +21,8 @@ __all__ = [
     "min_energy_under_slo", "sweet_spot", "Engine", "RealExecutor",
     "DevicePagedKV", "OutOfPages", "PagedKVPool", "SETUPS", "Cluster",
     "SetupResult", "run_setup", "PrefixCache", "ReuseResult", "Request",
-    "SLO", "WorkloadMetrics", "random_workload", "summarize", "DiskPath",
+    "SLO", "WorkloadMetrics", "meets_slo", "random_workload", "summarize",
+    "DiskPath",
     "HostPath", "ICIPath", "TransferPath", "make_path",
     "FrequencySweep", "best_total_energy", "sweep_frequencies",
 ]

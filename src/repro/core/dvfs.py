@@ -36,16 +36,28 @@ class FrequencySweep:
         return pareto_frontier(self.decode_points)
 
 
+def _materialize(workload) -> List[Request]:
+    """Accept either a zero-arg factory (the legacy t=0 batches) or any
+    object with a ``build()`` method (``repro.workload.WorkloadSpec``);
+    each call must yield a FRESH request list (requests are mutated by a
+    run), which both forms guarantee."""
+    build = getattr(workload, "build", None)
+    if callable(build):
+        return build()
+    return workload()
+
+
 def sweep_frequencies(setup: str, cfg: ModelConfig,
-                      workload_factory: Callable[[], List[Request]],
+                      workload: Callable[[], List[Request]],
                       freq_grid: Tuple[float, ...] = DEFAULT_FREQ_GRID,
                       **cluster_kw) -> FrequencySweep:
     """Run the fixed workload at each grid frequency (set on ALL
-    accelerators, as the paper does) and collect per-stage points."""
+    accelerators, as the paper does) and collect per-stage points.
+    ``workload`` is a request-list factory or a ``WorkloadSpec``."""
     prefill_pts, decode_pts, results = [], [], {}
     for phi in freq_grid:
         res = Cluster(setup, cfg, phi=phi, **cluster_kw).run(
-            workload_factory())
+            _materialize(workload))
         e_prefill = res.energy.by_stage.get("prefill", 0.0)
         e_decode = res.energy.by_stage.get("decode", 0.0)
         e_transfer = res.energy.by_stage.get("transfer", 0.0)
@@ -63,7 +75,7 @@ def sweep_frequencies(setup: str, cfg: ModelConfig,
 
 
 def sweep_independent(setup: str, cfg: ModelConfig,
-                      workload_factory: Callable[[], List[Request]],
+                      workload: Callable[[], List[Request]],
                       freq_grid: Tuple[float, ...] = DEFAULT_FREQ_GRID,
                       **cluster_kw) -> List[Dict]:
     """True stage-wise independent scaling for disaggregated setups: run
@@ -76,7 +88,7 @@ def sweep_independent(setup: str, cfg: ModelConfig,
     for phi_p in freq_grid:
         for phi_d in freq_grid:
             res = Cluster(setup, cfg, phi_prefill=phi_p, phi_decode=phi_d,
-                          **cluster_kw).run(workload_factory())
+                          **cluster_kw).run(_materialize(workload))
             records.append({
                 "phi_prefill": phi_p, "phi_decode": phi_d,
                 "ttft_s": res.metrics.median_ttft_s,

@@ -91,6 +91,11 @@ class Engine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        # a request cannot be worked on before it arrives: an idle
+        # engine's clock fast-forwards to the arrival instant (a busy
+        # engine's clock is already past it and max() is a no-op), so
+        # prefill_start_s >= arrival_s and TTFT is never negative
+        self.t = max(self.t, req.arrival_s)
         seq = EngineSeq(req=req, prefill_target=req.prompt_len)
         if self.prefix_cache is not None and req.prompt_tokens is not None:
             hit = self.prefix_cache.lookup(req.prompt_tokens)
@@ -194,7 +199,12 @@ class Engine:
             seq.req.generated = 1
             if seq.next_token is not None:
                 seq.req.output_tokens.append(int(seq.next_token))
-        self.running.append(seq)
+        if seq.req.generated >= seq.req.output_len:
+            # single-token outputs finish at the first token
+            seq.req.finish_s = self.t
+            self.pool.free_seq(seq.seq_id)
+        else:
+            self.running.append(seq)
         return self.t
 
     # ------------------------------------------------------------------
@@ -299,7 +309,12 @@ class Engine:
                         seq.req.generated = 1
                         if seq.next_token is not None:
                             seq.req.output_tokens.append(int(seq.next_token))
-                    self.running.append(seq)
+                    if seq.req.generated >= seq.req.output_len:
+                        # single-token outputs finish at the first token
+                        seq.req.finish_s = t_end
+                        self.pool.free_seq(seq.seq_id)
+                    else:
+                        self.running.append(seq)
                 else:
                     self.on_prefill_done(self, seq, t_end)
         return True

@@ -130,16 +130,16 @@ class Cluster:
 
     # ------------------------------------------------------------------
     def submit(self, requests: List[Request]) -> None:
-        if self.setup == "co-2gpus":
-            # even split, round-robin (paper section IV-F)
-            for i, r in enumerate(requests):
-                self.engines[i % 2].submit(r)
-        elif self.setup == "co-1gpu":
-            for r in requests:
-                self.engines[0].submit(r)
-        else:
-            for r in requests:
-                self.engines[0].submit(r)
+        """Route every request through the event heap at its
+        ``arrival_s``: an engine never sees a request before it arrives
+        (submitting upfront let a staggered arrival be prefilled at t=0,
+        yielding negative TTFT). ``Engine.submit`` fast-forwards an idle
+        engine's clock to the arrival instant; a busy engine (clock
+        already past it) just queues the request."""
+        for i, r in enumerate(requests):
+            # co-2gpus: even split, round-robin (paper section IV-F)
+            eng = self.engines[i % 2 if self.setup == "co-2gpus" else 0]
+            self._push(r.arrival_s, lambda e=eng, r=r: e.submit(r))
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request],
@@ -154,7 +154,9 @@ class Cluster:
             t_next_event = self._events[0][0] if self._events else None
             if candidates:
                 eng = min(candidates, key=lambda e: e.t)
-                if t_next_event is not None and t_next_event < eng.t:
+                # <= so an arrival at exactly the engine's clock is
+                # admitted before the step that starts at that instant
+                if t_next_event is not None and t_next_event <= eng.t:
                     _, _, fn = heapq.heappop(self._events)
                     fn()
                     stalled.clear()

@@ -1,0 +1,148 @@
+"""Rate x setup x medium grid sweeps and the load-crossover locator.
+
+The paper's caveat — disaggregation's benefit "depends on the request
+load and KV transfer mediums" — becomes a measurable object here: the
+*crossover load*, the offered rate at which the SLO-goodput winner
+between a dis-* setup and the equal-resource co-2gpus baseline flips.
+On this cost model (repo findings F1/F2) colocation wins below the
+crossover — while arrivals rarely overlap there is no interference for
+disaggregation to remove, so the KV handoff is pure overhead — and
+disaggregation wins above it, where colocated prefill-priority stalls
+decode (TPOT inflation) and, past the KV-pool limit, preemption churn
+triggers the recompute cliff. Slower media shift the crossover upward;
+dis-disk typically never crosses at all.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.orchestrator import SETUPS, Cluster, SetupResult
+from repro.core.request import SLO
+
+from .goodput import GoodputReport, evaluate
+from .lengths import LengthMix
+from .spec import open_loop_workload
+
+
+@dataclass(frozen=True)
+class RatePoint:
+    setup: str
+    rate: float
+    attainment: float
+    goodput_rps: float
+    offered_rps: float
+    median_ttft_s: float
+    p99_ttft_s: float
+    median_tpot_s: float
+    makespan_s: float
+    joules_per_token: float
+    total_evictions: int
+
+    def as_row(self) -> List:
+        return [self.setup, self.rate, round(self.attainment, 4),
+                round(self.goodput_rps, 4), round(self.median_ttft_s, 4),
+                round(self.p99_ttft_s, 4),
+                round(self.median_tpot_s * 1e3, 3),
+                round(self.makespan_s, 2),
+                round(self.joules_per_token, 4), self.total_evictions]
+
+    ROW_HEADER = ["setup", "rate_rps", "slo_attainment", "goodput_rps",
+                  "median_ttft_s", "p99_ttft_s", "median_tpot_ms",
+                  "makespan_s", "j_per_token", "evictions"]
+
+
+def run_rate_point(setup: str, cfg, rate: float, *,
+                   lengths: Optional[LengthMix] = None,
+                   slo: Optional[SLO] = None, n: int = 24, seed: int = 0,
+                   arrival: str = "poisson",
+                   **cluster_kw) -> RatePoint:
+    """One grid cell: a fresh Cluster serving an open-loop workload."""
+    reqs = open_loop_workload(rate, n, lengths=lengths, slo=slo,
+                              arrival=arrival, seed=seed)
+    res: SetupResult = Cluster(setup, cfg, **cluster_kw).run(reqs)
+    rep: GoodputReport = evaluate(reqs, slo)
+    m = res.metrics
+    return RatePoint(setup=setup, rate=rate, attainment=rep.attainment,
+                     goodput_rps=rep.goodput_rps,
+                     offered_rps=rep.offered_rps,
+                     median_ttft_s=m.median_ttft_s,
+                     p99_ttft_s=m.p99_ttft_s,
+                     median_tpot_s=m.median_tpot_s,
+                     makespan_s=m.makespan_s,
+                     joules_per_token=res.joules_per_token,
+                     total_evictions=m.total_evictions)
+
+
+def rate_grid(cfg, rates: Sequence[float],
+              setups: Sequence[str] = SETUPS, **kw) -> List[RatePoint]:
+    """The full rate x setup grid (media are setups: dis-ici/host/disk)."""
+    return [run_rate_point(s, cfg, r, **kw) for s in setups for r in rates]
+
+
+# ----------------------------------------------------------------------
+def goodput_gap(setup: str, baseline: str, cfg, rate: float,
+                cache: Optional[Dict[Tuple[str, float], float]] = None,
+                **kw) -> float:
+    """goodput(setup) - goodput(baseline) at one offered rate.
+
+    ``cache`` maps (setup, rate) -> goodput_rps and is consulted/filled
+    so bisections sharing a baseline (or following a ``rate_grid``) do
+    not re-simulate identical cells; entries are only valid for one
+    fixed (cfg, workload, slo) combination — the caller's scope."""
+    def goodput(s: str) -> float:
+        key = (s, rate)
+        if cache is not None and key in cache:
+            return cache[key]
+        g = run_rate_point(s, cfg, rate, **kw).goodput_rps
+        if cache is not None:
+            cache[key] = g
+        return g
+
+    return goodput(setup) - goodput(baseline)
+
+
+@dataclass(frozen=True)
+class Crossover:
+    """The load at which the goodput winner flips between two setups."""
+    rate: float
+    winner_below: str
+    winner_above: str
+
+
+def crossover_rate(setup: str, cfg, *, baseline: str = "co-2gpus",
+                   lo: float, hi: float, iters: int = 5,
+                   cache: Optional[Dict[Tuple[str, float], float]] = None,
+                   **kw) -> Optional[Crossover]:
+    """Bisect for the offered rate where the goodput winner between
+    ``setup`` and ``baseline`` flips, in either orientation.
+
+    On this simulator's seeded physics (findings F1/F2) the flip runs
+    co->dis: below the crossover the colocated baseline matches or beats
+    dis-* (the KV handoff buys nothing while there is no interference to
+    avoid), above it colocated prefill-priority interference — and, past
+    the pool limit, preemption churn — hands the win to disaggregation.
+    DistServe's orientation (dis wins low, co wins at saturation) is the
+    mirror image; ``Crossover`` records who wins on each side rather
+    than assuming one. Returns None when there is no sign change inside
+    [lo, hi]: one side wins the whole bracket (dis-disk typically never
+    beats co-2gpus at any rate).
+    """
+    if cache is None:
+        cache = {}          # at least dedupe within this bisection
+    g_lo = goodput_gap(setup, baseline, cfg, lo, cache=cache, **kw)
+    g_hi = goodput_gap(setup, baseline, cfg, hi, cache=cache, **kw)
+    if g_lo == 0.0 or (g_lo > 0) == (g_hi > 0):
+        return None
+    lo_wins_setup = g_lo > 0
+    for _ in range(iters):
+        mid = (lo + hi) / 2.0
+        if (goodput_gap(setup, baseline, cfg, mid, cache=cache, **kw) > 0) \
+                == lo_wins_setup:
+            lo = mid
+        else:
+            hi = mid
+    mid = (lo + hi) / 2.0
+    return Crossover(rate=mid,
+                     winner_below=setup if lo_wins_setup else baseline,
+                     winner_above=baseline if lo_wins_setup else setup)

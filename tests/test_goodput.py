@@ -1,0 +1,133 @@
+"""SLO attainment, goodput, and the bisection sweeps — unit-level on
+hand-built requests and a stubbed cost model (no Cluster runs except the
+slow-marked full rate grid at the bottom).
+"""
+import numpy as np
+import pytest
+
+from repro.core import SLO, meets_slo
+from repro.core.request import Request
+from repro.workload import (Crossover, evaluate, max_goodput_rate,
+                            run_rate_point)
+
+
+def _req(i, arrival, ttft, tpot, out_len=9):
+    """A finished request with exact latency metrics."""
+    r = Request(req_id=i, prompt_len=16, output_len=out_len,
+                arrival_s=arrival)
+    r.prefill_start_s = arrival + ttft / 2
+    r.prefill_done_s = r.first_token_s = arrival + ttft
+    if tpot is None:
+        r.generated = 1
+        r.finish_s = r.first_token_s
+    else:
+        r.generated = out_len
+        r.finish_s = r.first_token_s + (out_len - 1) * tpot
+    return r
+
+
+# ----------------------------------------------------------------------
+def test_meets_slo_axes():
+    r = _req(0, 0.0, ttft=0.5, tpot=0.01)
+    assert meets_slo(r, SLO())                          # vacuous
+    assert meets_slo(r, SLO(ttft_s=0.5, tpot_s=0.01))  # boundary passes
+    assert not meets_slo(r, SLO(ttft_s=0.4))
+    assert not meets_slo(r, SLO(tpot_s=0.005))
+    assert meets_slo(r, SLO(ttft_s=1.0, tpot_s=0.02))
+
+
+def test_meets_slo_single_token_judged_on_ttft_alone():
+    r = _req(0, 0.0, ttft=0.5, tpot=None)
+    assert meets_slo(r, SLO(ttft_s=1.0, tpot_s=1e-9))   # tpot can't fail
+    assert not meets_slo(r, SLO(ttft_s=0.1, tpot_s=1e-9))
+
+
+def test_meets_slo_uses_request_slo_by_default():
+    r = _req(0, 0.0, ttft=0.5, tpot=0.01)
+    r.slo = SLO(ttft_s=0.1)
+    assert not meets_slo(r)
+    assert meets_slo(r, SLO(ttft_s=1.0))                # override wins
+
+
+def test_evaluate_exact_math():
+    # 4 requests, arrivals 0..3; two meet (ttft 0.1), two miss (ttft 9)
+    reqs = [_req(i, float(i), ttft=(0.1 if i < 2 else 9.0), tpot=0.01)
+            for i in range(4)]
+    rep = evaluate(reqs, SLO(ttft_s=1.0))
+    assert rep.n == 4 and rep.attained == 2
+    assert rep.attainment == 0.5
+    dur = max(r.finish_s for r in reqs)                 # first arrival = 0
+    assert rep.duration_s == pytest.approx(dur)
+    assert rep.goodput_rps == pytest.approx(2 / dur)
+    assert rep.offered_rps == pytest.approx(1.0)        # 3 gaps over 3 s
+
+
+def test_evaluate_requires_finished_requests():
+    r = _req(0, 0.0, ttft=0.1, tpot=0.01)
+    r.finish_s = None
+    with pytest.raises(AssertionError):
+        evaluate([r])
+
+
+# ----------------------------------------------------------------------
+# bisection on a stubbed cost model: attainment degrades linearly in
+# rate, so the capacity under a 90% target is known in closed form
+# ----------------------------------------------------------------------
+def _stub_runner(capacity_rps):
+    """attainment(rate) = 1.0 below capacity, then linear decay with
+    slope 1/capacity: attainment(capacity * (1+x)) = 1 - x."""
+    def run(rate):
+        n = 40
+        frac = min(1.0, max(0.0, 2.0 - rate / capacity_rps))
+        k = int(round(n * frac))
+        return [_req(i, i / rate,
+                     ttft=(0.1 if i < k else 9.0), tpot=0.001)
+                for i in range(n)]
+    return run
+
+
+def test_max_goodput_rate_on_stub():
+    cap = 6.0
+    # attainment >= 0.9 holds up to rate = cap * 1.1 = 6.6
+    got = max_goodput_rate(_stub_runner(cap), slo=SLO(ttft_s=1.0),
+                           lo=0.5, hi=32.0, target_attainment=0.9,
+                           rel_tol=0.02, max_iters=20)
+    assert got == pytest.approx(6.6, rel=0.05)
+
+
+def test_max_goodput_rate_degenerate_brackets():
+    assert max_goodput_rate(_stub_runner(1.0), slo=SLO(ttft_s=1.0),
+                            lo=16.0, hi=32.0) == 0.0   # lo already fails
+    assert max_goodput_rate(_stub_runner(1e6), slo=SLO(ttft_s=1.0),
+                            lo=1.0, hi=8.0) == 8.0     # never fails
+
+
+def test_max_goodput_rate_monotone_in_stub_capacity():
+    slo = SLO(ttft_s=1.0)
+    caps = [max_goodput_rate(_stub_runner(c), slo=slo, lo=0.5, hi=64.0,
+                             rel_tol=0.02, max_iters=20)
+            for c in (2.0, 4.0, 8.0)]
+    assert caps[0] < caps[1] < caps[2]
+
+
+# ----------------------------------------------------------------------
+# full rate-grid sweep on the real cost model (slow lane)
+# ----------------------------------------------------------------------
+@pytest.mark.slow
+def test_full_rate_grid_medium_ordering():
+    from repro.configs import get_config
+    from repro.workload import rate_grid
+    cfg = get_config("llama32-3b")
+    slo = SLO(ttft_s=2.0, tpot_s=0.0075)
+    rates = (1.0, 2.0, 4.0, 8.0, 16.0)
+    setups = ("co-2gpus", "dis-ici", "dis-host", "dis-disk")
+    pts = {(p.setup, p.rate): p
+           for p in rate_grid(cfg, rates, setups=setups, slo=slo, n=24)}
+    for r in rates:
+        # F3 at every load level: slower media can only hurt TTFT
+        assert pts[("dis-ici", r)].median_ttft_s \
+            <= pts[("dis-host", r)].median_ttft_s \
+            <= pts[("dis-disk", r)].median_ttft_s
+        # goodput can never exceed the offered rate
+        for s in setups:
+            assert pts[(s, r)].goodput_rps <= pts[(s, r)].offered_rps + 1e-6

@@ -1,0 +1,232 @@
+"""Workload subsystem: generator properties + the arrival-awareness
+regression (a staggered request must never be served before it arrives).
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Cluster, SETUPS, SLO, summarize
+from repro.core.request import Request
+from repro.workload import (ChatbotLengths, DeterministicArrivals,
+                            GammaArrivals, MixtureLengths,
+                            PaperFixedLengths, PoissonArrivals,
+                            RAGSharedPrefixLengths, RampArrivals,
+                            ShareGPTLengths, WorkloadSpec, make_arrivals,
+                            make_lengths, open_loop_workload)
+
+from hypothesis_compat import given, settings, st
+
+CFG = get_config("llama32-3b")
+
+ALL_PROCESSES = (PoissonArrivals(4.0), GammaArrivals(4.0, cv=2.0),
+                 RampArrivals(1.0, 8.0, ramp_s=5.0),
+                 DeterministicArrivals(4.0))
+ALL_MIXES = (PaperFixedLengths(), ShareGPTLengths(), ChatbotLengths(),
+             RAGSharedPrefixLengths(),
+             MixtureLengths(((0.6, ChatbotLengths()),
+                             (0.4, RAGSharedPrefixLengths()))))
+
+
+# ----------------------------------------------------------------------
+# hypothesis property tests (skip gracefully without the dep)
+# ----------------------------------------------------------------------
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(0, 200))
+@settings(max_examples=25, deadline=None)
+def test_arrivals_seed_deterministic_and_sorted(seed, n):
+    for proc in ALL_PROCESSES:
+        a = proc.times(n, seed=seed)
+        b = proc.times(n, seed=seed)
+        assert np.array_equal(a, b), type(proc).__name__
+        assert a.shape == (n,)
+        assert np.all(np.diff(a) >= 0.0)
+        assert n == 0 or a[0] >= 0.0
+
+
+@given(rate=st.floats(0.5, 50.0), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_poisson_mean_rate_converges(rate, seed):
+    n = 4000
+    t = PoissonArrivals(rate).times(n, seed=seed)
+    # t[-1] ~ Gamma(n, 1/rate): relative sd = 1/sqrt(n) ~ 1.6%; 10% slack
+    assert abs(n / t[-1] - rate) / rate < 0.10
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_length_mixes_deterministic_and_bounded(seed):
+    for mix in ALL_MIXES:
+        s1 = mix.sample(64, seed=seed)
+        s2 = mix.sample(64, seed=seed)
+        assert s1 == s2, type(mix).__name__
+        for shape in s1:
+            assert shape.prompt_len >= 1
+            assert shape.output_len >= 1
+            assert 0 <= shape.prefix_len <= shape.prompt_len
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_sharegpt_respects_clip_bounds(seed):
+    mix = ShareGPTLengths()
+    for shape in mix.sample(256, seed=seed):
+        assert mix.prompt_min <= shape.prompt_len <= mix.prompt_max
+        assert mix.output_min <= shape.output_len <= mix.output_max
+
+
+# ----------------------------------------------------------------------
+# plain unit tests (run with or without hypothesis)
+# ----------------------------------------------------------------------
+def test_deterministic_arrivals_ignore_seed():
+    p = DeterministicArrivals(2.0)
+    assert np.array_equal(p.times(10, seed=0), p.times(10, seed=99))
+    assert np.allclose(np.diff(p.times(10)), 0.5)
+
+
+def test_ramp_densifies_toward_rate1():
+    t = RampArrivals(0.5, 8.0, ramp_s=20.0).times(200, seed=1)
+    # the second half of the schedule must be much denser than the first
+    mid = t[len(t) // 2]
+    early = np.sum(t <= mid / 2)
+    late = np.sum((t > mid / 2) & (t <= mid))
+    assert late > early
+
+
+def test_open_loop_workload_supports_every_arrival_kind():
+    """Regression: arrival="ramp" used to crash (RampArrivals has no
+    ``rate`` field); ``rate`` now maps to the ramp's terminal rate1."""
+    for kind in ("poisson", "gamma", "deterministic", "ramp"):
+        reqs = open_loop_workload(4.0, 6, arrival=kind,
+                                  lengths=PaperFixedLengths(256, 4))
+        assert len(reqs) == 6, kind
+        arr = [r.arrival_s for r in reqs]
+        assert arr == sorted(arr) and arr[0] >= 0.0
+    # explicit ramp knobs still win over the derived defaults
+    reqs = open_loop_workload(4.0, 6, arrival="ramp", rate0=0.5,
+                              ramp_s=2.0,
+                              lengths=PaperFixedLengths(256, 4))
+    assert len(reqs) == 6
+
+
+def test_registries_reject_unknown_names():
+    with pytest.raises(ValueError, match="unknown arrival"):
+        make_arrivals("weibull", rate=1.0)
+    with pytest.raises(ValueError, match="unknown length"):
+        make_lengths("the-pile")
+    assert isinstance(make_arrivals("gamma", rate=2.0, cv=3.0),
+                      GammaArrivals)
+    assert isinstance(make_lengths("rag-shared-prefix"),
+                      RAGSharedPrefixLengths)
+
+
+def test_workload_spec_build_is_reproducible():
+    spec = WorkloadSpec(arrivals=PoissonArrivals(3.0),
+                        lengths=ShareGPTLengths(), n=16, seed=7,
+                        slo=SLO(ttft_s=1.0, tpot_s=0.01), vocab_size=128)
+    r1, r2 = spec.build(), spec.build()
+    assert [(r.req_id, r.arrival_s, r.prompt_len, r.output_len)
+            for r in r1] == \
+           [(r.req_id, r.arrival_s, r.prompt_len, r.output_len)
+            for r in r2]
+    for a, b in zip(r1, r2):
+        assert np.array_equal(a.prompt_tokens, b.prompt_tokens)
+        assert a.slo.ttft_s == 1.0 and a.slo.tpot_s == 0.01
+        assert a.slo is not b.slo        # no shared mutable SLO
+    # req_id is the FCFS priority key: must follow arrival order
+    arr = [r.arrival_s for r in r1]
+    assert arr == sorted(arr)
+    assert [r.req_id for r in r1] == list(range(16))
+
+
+def test_rag_tenant_shares_token_prefix():
+    spec = WorkloadSpec(arrivals=DeterministicArrivals(4.0),
+                        lengths=RAGSharedPrefixLengths(prefix_len=64),
+                        n=4, seed=0, vocab_size=997)
+    reqs = spec.build()
+    first = reqs[0].prompt_tokens[:64]
+    for r in reqs[1:]:
+        assert np.array_equal(r.prompt_tokens[:64], first)
+
+
+# ----------------------------------------------------------------------
+# the negative-TTFT regression (satellite fix): staggered arrivals on
+# every setup must be admitted no earlier than they arrive
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("setup", SETUPS)
+def test_staggered_arrivals_nonnegative_ttft(setup):
+    reqs = open_loop_workload(0.5, 5, arrival="deterministic",
+                              lengths=PaperFixedLengths(2048, 4), seed=0)
+    assert all(r.arrival_s > 0 for r in reqs)      # genuinely staggered
+    Cluster(setup, CFG).run(reqs)
+    for r in reqs:
+        assert r.prefill_start_s >= r.arrival_s, setup
+        assert r.ttft_s is not None and r.ttft_s >= 0.0, \
+            f"{setup}: negative TTFT {r.ttft_s}"
+        assert r.finish_s >= r.first_token_s >= r.arrival_s
+
+
+def test_idle_gap_arrivals_fast_forward_clock():
+    """Arrivals far apart: each request is served on an otherwise idle
+    engine whose clock must jump to the arrival instant, keeping TTFT
+    identical to the lone-request TTFT."""
+    reqs = open_loop_workload(0.01, 3, arrival="deterministic",
+                              lengths=PaperFixedLengths(2048, 4))
+    Cluster("co-1gpu", CFG).run(reqs)
+    ttfts = [r.ttft_s for r in reqs]
+    assert max(ttfts) - min(ttfts) < 1e-9          # no queueing between
+    assert all(t >= 0 for t in ttfts)
+
+
+# ----------------------------------------------------------------------
+# tpot_s: single-token requests have no inter-token interval
+# ----------------------------------------------------------------------
+def test_single_token_request_tpot_is_none():
+    reqs = open_loop_workload(4.0, 4, lengths=PaperFixedLengths(512, 1))
+    Cluster("co-1gpu", CFG).run(reqs)
+    assert all(r.generated == 1 for r in reqs)
+    assert all(r.tpot_s is None for r in reqs)
+    m = summarize(reqs)
+    assert m.median_tpot_s == 0.0 and m.p99_tpot_s == 0.0
+
+
+def test_summarize_excludes_single_token_from_tpot_percentiles():
+    fast, slow_ = 0.002, 0.004
+    reqs = []
+    for i, tpot in enumerate((fast, slow_, None)):
+        r = Request(req_id=i, prompt_len=8, output_len=1 if tpot is None
+                    else 11, arrival_s=0.0)
+        r.prefill_start_s = 0.0
+        r.prefill_done_s = r.first_token_s = 0.1
+        r.generated = 1 if tpot is None else 11
+        r.finish_s = 0.1 if tpot is None else 0.1 + 10 * tpot
+        reqs.append(r)
+    m = summarize(reqs)
+    # a 0.0 placeholder for the single-token request would have dragged
+    # the median to `fast`; excluding it gives the mid of (fast, slow)
+    assert m.median_tpot_s == pytest.approx((fast + slow_) / 2)
+    assert m.num_requests == 3
+
+
+def test_dvfs_sweep_accepts_workload_spec():
+    """DVFS sweeps take a WorkloadSpec directly (satellite: sweeps
+    accept a workload spec, not just a factory of t=0 batches)."""
+    from repro.core.dvfs import sweep_frequencies
+    spec = WorkloadSpec(arrivals=DeterministicArrivals(8.0),
+                        lengths=PaperFixedLengths(2048, 4), n=4, seed=0)
+    sw = sweep_frequencies("dis-ici", CFG, spec, freq_grid=(0.58, 1.0))
+    assert set(sw.results) == {0.58, 1.0}
+    assert all(p.latency_s > 0 for p in sw.prefill_points)
+    # slowing the clock can only raise median TTFT (prefill compute-bound)
+    assert sw.results[0.58].metrics.median_ttft_s \
+        >= sw.results[1.0].metrics.median_ttft_s
+
+
+def test_workload_metrics_open_loop_fields():
+    reqs = open_loop_workload(2.0, 6, lengths=PaperFixedLengths(1024, 8),
+                              slo=SLO(ttft_s=10.0, tpot_s=1.0))
+    Cluster("dis-ici", CFG).run(reqs)
+    m = summarize(reqs)
+    assert m.num_requests == 6
+    assert 0.0 < m.offered_rps < float("inf")
+    assert m.slo_attainment == 1.0                 # SLOs are very loose
+    assert m.goodput_rps > 0.0
+    assert m.median_queue_s >= 0.0
