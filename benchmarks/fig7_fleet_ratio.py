@@ -1,0 +1,130 @@
+"""Fig 7 (new): goodput-optimal P:D ratio vs offered load and KV medium.
+
+The fleet-scale version of the paper's central caveat: once a serving
+pool has more than one instance per stage, the P:D instance *ratio*
+joins load and medium as a first-order knob (P/D-Serve, FlowKV). Sweep
+xP:yD shapes at a fixed instance budget x offered Poisson rate x KV
+medium, score each cell with DistServe-style SLO goodput, and report
+the goodput-optimal ratio per (medium, rate). A capacity check also
+bisects ``max_goodput_rate`` for 1P:1D vs 2P:2D over ici — doubling
+both stages must strictly raise the sustainable rate (the fleet's
+scaling sanity bar, asserted by CI on the smoke JSON).
+
+  python -m benchmarks.fig7_fleet_ratio            # full grid
+  python -m benchmarks.fig7_fleet_ratio --smoke    # CI: tiny grid + JSON
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import get_config
+from repro.core import SLO
+from repro.fleet import FleetSpec
+from repro.workload import (DEFAULT_INTERACTIVE_SLO, RatePoint,
+                            max_goodput_rate, rate_grid)
+
+from . import common
+
+DEFAULT_SLO = DEFAULT_INTERACTIVE_SLO
+# the fixed-budget ratio family (4 instances) plus the minimal fleet
+RATIO_SHAPES = ((1, 3), (2, 2), (3, 1))
+CAPACITY_SHAPES = ((1, 1), (2, 2))
+
+
+def run(arch: str = common.ARCH, *, rates=None, n: int = common.OPEN_LOOP_N,
+        slo: SLO = DEFAULT_SLO, smoke: bool = False, seed: int = 0):
+    cfg = get_config(arch)
+    media = ("ici",) if smoke else ("ici", "host", "disk")
+    if rates is None:
+        rates = (4.0, 8.0) if smoke else (2.0, 4.0, 8.0, 16.0)
+
+    # ratio grid: P:D shape x rate x medium, scored by SLO goodput ------
+    specs = [FleetSpec.disaggregated(x, y, medium=m)
+             for m in media for (x, y) in RATIO_SHAPES]
+    points = rate_grid(cfg, rates, setups=specs, slo=slo, n=n, seed=seed)
+    rows = [p.as_row() for p in points]
+    common.print_table("Fig 7: SLO goodput by P:D ratio x load x medium",
+                       RatePoint.ROW_HEADER, rows)
+    common.write_csv("fig7_fleet_ratio.csv", RatePoint.ROW_HEADER, rows)
+
+    by_cell = {(p.setup, p.rate): p.goodput_rps for p in points}
+    optimal = {}
+    for m in media:
+        labels = [FleetSpec.disaggregated(x, y, medium=m).name
+                  for (x, y) in RATIO_SHAPES]
+        optimal[m] = {
+            rate: max(labels, key=lambda s: by_cell[(s, rate)])
+            for rate in rates}
+        for rate, best in optimal[m].items():
+            print(f"{m} @ {rate} req/s: goodput-optimal ratio {best}")
+
+    # capacity check: 2P:2D must sustain strictly more than 1P:1D ------
+    def probe_cap(shape, hi):
+        spec = FleetSpec.disaggregated(*shape, medium="ici")
+        return spec.name, max_goodput_rate(
+            spec, cfg, slo=slo, lo=1.0, hi=hi,
+            max_iters=6 if smoke else 10, rel_tol=0.1, n=n, seed=seed)
+
+    # max_goodput_rate returns hi when hi still attains: a bracket
+    # ceiling, not a measurement. A saturated BASELINE would make the
+    # scaling comparison ceiling-vs-ceiling, so widen until the 1P:1D
+    # number resolves; a saturated 2P:2D is fine (true cap >= ceiling
+    # > the resolved baseline) and is flagged in the JSON.
+    cap_hi = 64.0
+    while True:
+        base_name, base_cap = probe_cap(CAPACITY_SHAPES[0], cap_hi)
+        if base_cap < cap_hi or cap_hi >= 1024.0:
+            break
+        cap_hi *= 2.0
+    big_name, big_cap = probe_cap(CAPACITY_SHAPES[1], cap_hi)
+    caps = {base_name: base_cap, big_name: big_cap}
+    saturated = {name: bool(cap >= cap_hi) for name, cap in caps.items()}
+    lo_cap, hi_cap = caps["1P1D-ici"], caps["2P2D-ici"]
+
+    def fmt(name):
+        return f"{'>=' if saturated[name] else ''}{caps[name]:.2f}"
+    print(f"capacity: 1P1D-ici {fmt('1P1D-ici')} req/s, "
+          f"2P2D-ici {fmt('2P2D-ici')} req/s "
+          f"({'OK' if hi_cap > lo_cap else 'FLEET DOES NOT SCALE'})")
+
+    payload = {
+        "arch": arch, "n_requests": n, "seed": seed,
+        "slo": {"ttft_s": slo.ttft_s, "tpot_s": slo.tpot_s},
+        "media": list(media), "rates_rps": list(rates),
+        "shapes": [f"{x}P{y}D" for (x, y) in RATIO_SHAPES],
+        "points": [dict(zip(RatePoint.ROW_HEADER, r)) for r in rows],
+        "optimal_ratio": optimal,
+        "capacity": {
+            "max_goodput_rate": caps,
+            "bracket_saturated": saturated,   # value == probe hi bound
+            "fleet_scales": bool(hi_cap > lo_cap),
+        },
+    }
+    os.makedirs(common.OUT_DIR, exist_ok=True)
+    json_path = os.path.join(common.OUT_DIR, "fig7_fleet_ratio.json")
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {json_path}")
+    return payload
+
+
+def main(argv=None):
+    ap = common.open_loop_arg_parser(__doc__)
+    ap.add_argument("--ttft-slo", type=float, default=DEFAULT_SLO.ttft_s)
+    ap.add_argument("--tpot-slo", type=float, default=DEFAULT_SLO.tpot_s)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI; emits the same JSON artifact")
+    args = ap.parse_args(argv)
+    n = args.requests
+    if args.smoke and n == common.OPEN_LOOP_N:
+        n = 16          # smaller smoke default unless --requests given
+    run(args.arch, rates=args.rate, n=n,
+        slo=SLO(ttft_s=args.ttft_slo, tpot_s=args.tpot_slo),
+        smoke=args.smoke, seed=args.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

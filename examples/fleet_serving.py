@@ -1,0 +1,79 @@
+"""Fleet-scale serving demo: xP:yD pools + load-aware KV routing.
+
+Builds one bursty open-loop workload (gamma arrivals over a ShareGPT-
+style long-tail length mix) and serves it three ways:
+
+  1. the P:D ratio story — a fixed 4-instance budget split 1P:3D,
+     2P:2D, 3P:1D over ici, showing the goodput-optimal ratio;
+  2. the router story — a 2-instance colocated pool balanced by the
+     static round-robin split vs the least-outstanding-tokens policy
+     (the fleet default), showing the p99 TTFT win on bursty traffic;
+  3. per-instance utilization — busy seconds and energy per engine, the
+     signal an autoscaler would act on.
+
+  PYTHONPATH=src python examples/fleet_serving.py
+  PYTHONPATH=src python examples/fleet_serving.py --rate 24 --n 64
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core import summarize
+from repro.fleet import FleetCluster, FleetSpec
+from repro.workload import (DEFAULT_INTERACTIVE_SLO, GammaArrivals,
+                            ShareGPTLengths, WorkloadSpec, evaluate)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama32-3b")
+    ap.add_argument("--rate", type=float, default=24.0)
+    ap.add_argument("--cv", type=float, default=4.0,
+                    help="arrival burstiness (gamma cv; 1 = Poisson)")
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    slo = DEFAULT_INTERACTIVE_SLO
+    wl = WorkloadSpec(arrivals=GammaArrivals(args.rate, cv=args.cv),
+                      lengths=ShareGPTLengths(prompt_sigma=1.5),
+                      n=args.n, seed=args.seed, slo=slo)
+    print(f"arch={cfg.name} rate={args.rate} req/s cv={args.cv} "
+          f"n={args.n} (bursty long-tail workload)")
+
+    print("\n-- P:D ratio at a fixed 4-instance budget (dis-ici)")
+    for x, y in ((1, 3), (2, 2), (3, 1)):
+        spec = FleetSpec.disaggregated(x, y, medium="ici")
+        reqs = wl.build()
+        res = FleetCluster(spec, cfg).run(reqs)
+        rep = evaluate(reqs, slo)
+        print(f"  {spec.name:9s} TTFT={res.metrics.median_ttft_s:6.3f}s "
+              f"p99={res.metrics.p99_ttft_s:6.3f}s "
+              f"TPOT={res.metrics.median_tpot_s * 1e3:6.2f}ms "
+              f"goodput={rep.goodput_rps:5.2f} req/s")
+
+    print("\n-- frontend router on a 2-instance colocated pool")
+    for policy in ("round-robin", "least-outstanding-tokens"):
+        spec = FleetSpec.colocated(2, router=policy)
+        reqs = wl.build()
+        FleetCluster(spec, cfg).run(reqs)
+        m = summarize(reqs)
+        print(f"  {policy:24s} p99 TTFT={m.p99_ttft_s:6.3f}s "
+              f"median={m.median_ttft_s:6.3f}s")
+
+    print("\n-- per-instance load on a 2P:2D ici fleet")
+    cluster = FleetCluster(FleetSpec.disaggregated(2, 2, medium="ici"), cfg)
+    reqs = wl.build()
+    res = cluster.run(reqs)
+    for e in cluster.engines:
+        print(f"  {e.name} ({e.role:9s}) busy={e.busy_s:7.2f}s "
+              f"steps={e.steps:5d} "
+              f"energy={res.energy.joules.get(e.name, 0.0):8.1f} J")
+    print("\nexpect: the balanced ratio wins goodput at this load; "
+          "least-outstanding-tokens cuts p99 TTFT vs round-robin; "
+          "prefill instances draw more energy, decode instances take "
+          "far more (tiny) steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,8 @@ from .energy import EnergyMeter, ParetoPoint, pareto_frontier, \
     min_energy_under_slo, sweet_spot
 from .engine import Engine, RealExecutor
 from .kvcache import DevicePagedKV, OutOfPages, PagedKVPool
-from .orchestrator import SETUPS, Cluster, SetupResult, run_setup
+from .orchestrator import SETUPS, Cluster, SetupResult, make_cluster, \
+    run_setup
 from .prefix_cache import PrefixCache, ReuseResult
 from .request import Request, SLO, WorkloadMetrics, meets_slo, \
     random_workload, summarize
@@ -20,7 +21,8 @@ __all__ = [
     "DEFAULT_FREQ_GRID", "EnergyMeter", "ParetoPoint", "pareto_frontier",
     "min_energy_under_slo", "sweet_spot", "Engine", "RealExecutor",
     "DevicePagedKV", "OutOfPages", "PagedKVPool", "SETUPS", "Cluster",
-    "SetupResult", "run_setup", "PrefixCache", "ReuseResult", "Request",
+    "SetupResult", "run_setup", "make_cluster", "PrefixCache",
+    "ReuseResult", "Request",
     "SLO", "WorkloadMetrics", "meets_slo", "random_workload", "summarize",
     "DiskPath",
     "HostPath", "ICIPath", "TransferPath", "make_path",

@@ -13,13 +13,16 @@ colocated single-phi point.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.configs.base import ModelConfig
+from repro.fleet.spec import FleetSpec, as_fleet_spec, setup_label
 from .costs import DEFAULT_FREQ_GRID
 from .energy import ParetoPoint, min_energy_under_slo, pareto_frontier
-from .orchestrator import Cluster, SetupResult
+from .orchestrator import SetupResult, make_cluster
 from .request import Request
+
+Setup = Union[str, FleetSpec]
 
 
 @dataclass
@@ -47,16 +50,18 @@ def _materialize(workload) -> List[Request]:
     return workload()
 
 
-def sweep_frequencies(setup: str, cfg: ModelConfig,
+def sweep_frequencies(setup: Setup, cfg: ModelConfig,
                       workload: Callable[[], List[Request]],
                       freq_grid: Tuple[float, ...] = DEFAULT_FREQ_GRID,
                       **cluster_kw) -> FrequencySweep:
     """Run the fixed workload at each grid frequency (set on ALL
     accelerators, as the paper does) and collect per-stage points.
-    ``workload`` is a request-list factory or a ``WorkloadSpec``."""
+    ``setup`` is a legacy setup name or any ``FleetSpec``; ``workload``
+    is a request-list factory or a ``WorkloadSpec``."""
+    label = setup_label(setup)
     prefill_pts, decode_pts, results = [], [], {}
     for phi in freq_grid:
-        res = Cluster(setup, cfg, phi=phi, **cluster_kw).run(
+        res = make_cluster(setup, cfg, phi=phi, **cluster_kw).run(
             _materialize(workload))
         e_prefill = res.energy.by_stage.get("prefill", 0.0)
         e_decode = res.energy.by_stage.get("decode", 0.0)
@@ -65,16 +70,16 @@ def sweep_frequencies(setup: str, cfg: ModelConfig,
         # prefill-side energy and the fetch to decode-side energy evenly
         prefill_pts.append(ParetoPoint(
             phi=phi, latency_s=res.metrics.median_ttft_s,
-            energy_j=e_prefill + 0.5 * e_transfer, label=setup))
+            energy_j=e_prefill + 0.5 * e_transfer, label=label))
         decode_pts.append(ParetoPoint(
             phi=phi, latency_s=res.metrics.median_tpot_s,
-            energy_j=e_decode + 0.5 * e_transfer, label=setup))
+            energy_j=e_decode + 0.5 * e_transfer, label=label))
         results[phi] = res
-    return FrequencySweep(setup=setup, prefill_points=prefill_pts,
+    return FrequencySweep(setup=label, prefill_points=prefill_pts,
                           decode_points=decode_pts, results=results)
 
 
-def sweep_independent(setup: str, cfg: ModelConfig,
+def sweep_independent(setup: Setup, cfg: ModelConfig,
                       workload: Callable[[], List[Request]],
                       freq_grid: Tuple[float, ...] = DEFAULT_FREQ_GRID,
                       **cluster_kw) -> List[Dict]:
@@ -82,13 +87,16 @@ def sweep_independent(setup: str, cfg: ModelConfig,
     the workload at every (phi_prefill, phi_decode) pair. This is the
     capability colocated serving cannot express (one clock drives both
     stages) — the paper's Experiment 2 question is whether any pair beats
-    the colocated frontier. Returns one record per pair."""
-    assert setup.startswith("dis"), "independent scaling needs 2 engines"
+    the colocated frontier. Returns one record per pair. Works for any
+    disaggregated fleet shape: the pair sets every instance of a stage."""
+    assert as_fleet_spec(setup).is_disaggregated, \
+        "independent scaling needs separate prefill/decode engines"
     records = []
     for phi_p in freq_grid:
         for phi_d in freq_grid:
-            res = Cluster(setup, cfg, phi_prefill=phi_p, phi_decode=phi_d,
-                          **cluster_kw).run(_materialize(workload))
+            res = make_cluster(setup, cfg, phi_prefill=phi_p,
+                               phi_decode=phi_d,
+                               **cluster_kw).run(_materialize(workload))
             records.append({
                 "phi_prefill": phi_p, "phi_decode": phi_d,
                 "ttft_s": res.metrics.median_ttft_s,

@@ -115,6 +115,31 @@ class Engine:
         self.decode_queue.append((seq, handle, fetch_cost))
 
     # ------------------------------------------------------------------
+    def outstanding_tokens(self) -> int:
+        """Remaining work queued on THIS engine, in tokens. This is the
+        load signal the fleet's least-outstanding-tokens router balances
+        on — unlike a request count, it weighs a 16k prompt ~64x heavier
+        than a chat turn. Only work this engine will actually execute
+        counts: a prefill-role engine hands its sequences off at
+        prefill-done, so their decode tokens are the *decode* engine's
+        outstanding work, not this one's."""
+        decode_here = self.role != "prefill"
+        tot = 0
+        for s in self.waiting:
+            tot += (s.prefill_target - s.prefill_done) \
+                + (s.req.output_len - s.req.generated if decode_here else 0)
+        for s in self.prefilling:
+            tot += (s.prefill_target - s.prefill_done) \
+                + (s.req.output_len - s.req.generated if decode_here else 0)
+        for s in self.running:
+            tot += s.req.output_len - s.req.generated
+        for s, _, _ in self.decode_queue:
+            tot += s.req.output_len - s.req.generated
+        for s, _, _ in self.pending_fetch:
+            tot += s.req.output_len - s.req.generated
+        return tot
+
+    # ------------------------------------------------------------------
     def has_work(self) -> bool:
         if self.prefilling or self.running or self.pending_fetch:
             return True

@@ -1,202 +1,58 @@
-"""Cluster orchestration: the paper's five experimental setups + event loop.
+"""Cluster orchestration: the paper's five experimental setups.
 
   co-1gpu    one colocated accelerator, full batch (DistServe's baseline)
-  co-2gpus   two colocated accelerators, batch split evenly (the paper's
-             new equal-resource baseline)
+  co-2gpus   two colocated accelerators, batch split by the load-aware
+             least-outstanding-tokens router (the paper's equal-resource
+             baseline; the old static ``i % 2`` split ignored queue
+             depth and inflated p99 TTFT on bursty arrivals)
   dis-ici    prefill acc + decode acc, KV over the interconnect (dis-gpu)
   dis-host   prefill acc + decode acc, KV staged in host DRAM  (dis-cpu)
   dis-disk   prefill acc + decode acc, KV staged on NVMe       (dis-disk)
 
-The orchestrator runs a discrete-event loop over engine steps and transfer
-legs, integrates energy (busy + idle + host-node baseline, mirroring the
-paper's pynvml/RAPL/IPMI stack), and returns per-request metrics.
+``Cluster`` is a thin facade: each setup is the smallest possible
+``repro.fleet`` fleet (1P:1D disaggregated, or 1-2 colocated), and the
+discrete-event loop, transfer legs, and energy integration all live in
+``FleetCluster`` (DESIGN.md section 10). Arbitrary xP:yD shapes go
+through ``make_cluster`` / ``run_setup`` with a ``FleetSpec``.
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import List, Optional, Union
 
 from repro.configs.base import ModelConfig
-from .costs import AcceleratorSpec, CostModel, HostSpec
-from .energy import EnergyMeter
-from .engine import Engine, EngineSeq, RealExecutor
-from .kvcache import PagedKVPool
-from .request import Request, WorkloadMetrics, summarize
-from .transfer import TransferPath, make_path
+from repro.fleet.cluster import FleetCluster, SetupResult
+from repro.fleet.spec import DIS_PATH, SETUPS, FleetSpec, as_fleet_spec
 
-SETUPS = ("co-1gpu", "co-2gpus", "dis-ici", "dis-host", "dis-disk")
-DIS_PATH = {"dis-ici": "ici", "dis-host": "host", "dis-disk": "disk"}
+from .request import Request
+
+__all__ = ["SETUPS", "DIS_PATH", "SetupResult", "Cluster", "make_cluster",
+           "run_setup"]
 
 
-@dataclass
-class SetupResult:
-    setup: str
-    metrics: WorkloadMetrics
-    energy: EnergyMeter
-    requests: List[Request]
-    makespan_s: float
-    total_tokens: int
+class Cluster(FleetCluster):
+    """The five legacy setups as minimal fleets; same constructor
+    signature and run() semantics as the pre-fleet orchestrator."""
 
-    @property
-    def joules_per_token(self) -> float:
-        return self.energy.total_j / max(self.total_tokens, 1)
-
-
-class Cluster:
     def __init__(self, setup: str, cfg: ModelConfig, *,
-                 acc: Optional[AcceleratorSpec] = None,
-                 host: Optional[HostSpec] = None,
                  phi: float = 1.0, phi_prefill: Optional[float] = None,
-                 phi_decode: Optional[float] = None,
-                 page_size: int = 16,
-                 prefill_token_budget: int = 8192,
-                 pool_bytes: Optional[float] = None,
-                 executor_factory: Optional[Callable[[TransferPath],
-                                                     RealExecutor]] = None):
+                 phi_decode: Optional[float] = None, **kw):
         assert setup in SETUPS, setup
-        self.setup = setup
-        self.cfg = cfg
-        self.acc = acc or AcceleratorSpec()
-        self.host = host or HostSpec()
-        self.cost = CostModel(cfg, self.acc, self.host)
-        self.meter = EnergyMeter()
-        self.phi_p = phi_prefill if phi_prefill is not None else phi
-        self.phi_d = phi_decode if phi_decode is not None else phi
-        pool_bytes = pool_bytes or self.acc.kv_pool_gb * 1e9
-        kv_per_tok = max(self.cost.kv_bytes_per_token, 1)
-
-        def new_pool():
-            return PagedKVPool.from_bytes(pool_bytes, kv_per_tok, page_size)
-
-        self.path: Optional[TransferPath] = None
-        self.engines: List[Engine] = []
-        self._events: List = []   # heap of (t, tiebreak, fn)
-        self._counter = itertools.count()
-
-        if setup in ("co-1gpu", "co-2gpus"):
-            n = 1 if setup == "co-1gpu" else 2
-            for i in range(n):
-                ex = executor_factory(None) if executor_factory else None
-                self.engines.append(Engine(
-                    f"acc{i}", "colocated", self.cost, new_pool(),
-                    self.meter, phi=self.phi_p,
-                    prefill_token_budget=prefill_token_budget, executor=ex))
-        else:
-            self.path = make_path(DIS_PATH[setup], self.host)
-            ex_p = executor_factory(self.path) if executor_factory else None
-            ex_d = executor_factory(self.path) if executor_factory else None
-            pre = Engine("acc0", "prefill", self.cost, new_pool(),
-                         self.meter, phi=self.phi_p,
-                         prefill_token_budget=prefill_token_budget,
-                         executor=ex_p, on_prefill_done=self._transfer)
-            dec = Engine("acc1", "decode", self.cost, new_pool(),
-                         self.meter, phi=self.phi_d,
-                         prefill_token_budget=prefill_token_budget,
-                         executor=ex_d)
-            self.engines = [pre, dec]
-            self._decode_engine = dec
-
-    # ------------------------------------------------------------------
-    def _push(self, t: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._events, (t, next(self._counter), fn))
-
-    # ------------------------------------------------------------------
-    def _transfer(self, engine: Engine, seq: EngineSeq, t_done: float):
-        """Store leg: runs right after prefill; pages stay held on the
-        prefill accelerator until the store completes."""
-        nbytes = self.cost.kv_bytes(seq.ctx)
-        store = self.path.store_cost(nbytes)
-        fetch = self.path.fetch_cost(nbytes)
-        for comp, joules in store.energy_j.items():
-            self.meter.add(comp, joules, stage="transfer")
-        handle = None
-        if engine.executor is not None:
-            handle = engine.executor.store(seq)
-
-        t_arrive = t_done + store.latency_s
-        seq.req.transfer_done_s = t_arrive
-
-        def deliver():
-            engine.pool.free_seq(seq.seq_id)
-            # both engines resume no earlier than the store completion:
-            # the prefill engine may have been blocked on pool space
-            engine.t = max(engine.t, t_arrive)
-            self._decode_engine.enqueue_decode(seq, handle, fetch)
-            self._decode_engine.t = max(self._decode_engine.t, t_arrive)
-
-        self._push(t_arrive, deliver)
-
-    # ------------------------------------------------------------------
-    def submit(self, requests: List[Request]) -> None:
-        """Route every request through the event heap at its
-        ``arrival_s``: an engine never sees a request before it arrives
-        (submitting upfront let a staggered arrival be prefilled at t=0,
-        yielding negative TTFT). ``Engine.submit`` fast-forwards an idle
-        engine's clock to the arrival instant; a busy engine (clock
-        already past it) just queues the request."""
-        for i, r in enumerate(requests):
-            # co-2gpus: even split, round-robin (paper section IV-F)
-            eng = self.engines[i % 2 if self.setup == "co-2gpus" else 0]
-            self._push(r.arrival_s, lambda e=eng, r=r: e.submit(r))
-
-    # ------------------------------------------------------------------
-    def run(self, requests: List[Request],
-            max_steps: int = 2_000_000) -> SetupResult:
-        self.submit(requests)
-        steps = 0
-        stalled = set()   # engines that made no progress; wait for an event
-        while steps < max_steps:
-            steps += 1
-            candidates = [e for e in self.engines
-                          if e not in stalled and e.has_work()]
-            t_next_event = self._events[0][0] if self._events else None
-            if candidates:
-                eng = min(candidates, key=lambda e: e.t)
-                # <= so an arrival at exactly the engine's clock is
-                # admitted before the step that starts at that instant
-                if t_next_event is not None and t_next_event <= eng.t:
-                    _, _, fn = heapq.heappop(self._events)
-                    fn()
-                    stalled.clear()
-                    continue
-                if not eng.step():
-                    # no progress (e.g. pool blocked by in-flight stores):
-                    # park until the next event frees resources
-                    stalled.add(eng)
-                continue
-            if self._events:
-                _, _, fn = heapq.heappop(self._events)
-                fn()
-                stalled.clear()
-                continue
-            break
-
-        unfinished = [r for r in requests if not r.done]
-        assert not unfinished, (
-            f"{self.setup}: {len(unfinished)} requests never finished "
-            f"after {steps} loop iterations (deadlock?)")
-
-        makespan = max(r.finish_s for r in requests) - \
-            min(r.arrival_s for r in requests)
-        # idle (static) accelerator power over the inference period
-        for e in self.engines:
-            idle_s = max(makespan - e.busy_s, 0.0)
-            self.meter.add_power(e.name, self.cost.idle_power_w(), idle_s,
-                                 stage="idle")
-        # host-node baseline draw (IPMI-style whole-node accounting)
-        self.meter.add_power("cpu", self.host.cpu_idle_w, makespan, "idle")
-        self.meter.add_power("dram", self.host.dram_idle_w, makespan, "idle")
-        self.meter.add_power("disk", self.host.disk_idle_w, makespan, "idle")
-
-        total_tokens = sum(r.prompt_len + r.generated for r in requests)
-        return SetupResult(setup=self.setup, metrics=summarize(requests),
-                           energy=self.meter, requests=requests,
-                           makespan_s=makespan, total_tokens=total_tokens)
+        super().__init__(FleetSpec.from_setup(setup), cfg, phi=phi,
+                         phi_prefill=phi_prefill, phi_decode=phi_decode,
+                         **kw)
+        self.setup = setup      # report under the legacy name
 
 
 # ----------------------------------------------------------------------
-def run_setup(setup: str, cfg: ModelConfig, requests: List[Request],
-              **kw) -> SetupResult:
-    return Cluster(setup, cfg, **kw).run(requests)
+def make_cluster(setup: Union[str, FleetSpec], cfg: ModelConfig,
+                 **kw) -> FleetCluster:
+    """A cluster for a legacy setup name (reported under that name),
+    a ``FleetSpec``, or a fleet-shape string like ``"2P2D-ici"``."""
+    if isinstance(setup, str) and setup in SETUPS:
+        return Cluster(setup, cfg, **kw)
+    return FleetCluster(as_fleet_spec(setup), cfg, **kw)
+
+
+def run_setup(setup: Union[str, FleetSpec], cfg: ModelConfig,
+              requests: List[Request], **kw) -> SetupResult:
+    return make_cluster(setup, cfg, **kw).run(requests)

@@ -1,0 +1,253 @@
+"""FleetCluster: the discrete-event serving loop over an xP:yD fleet.
+
+The generalization of the paper's five two-accelerator setups to
+arbitrary fleet shapes (``FleetSpec``): x prefill + y decode instances
+(or n colocated), each with its own ``PagedKVPool``, per-instance DVFS
+setting, and energy attribution under one shared ``EnergyMeter``.
+Arriving requests are routed to a prefill instance by the frontend
+``Router`` at their arrival event; a finished prefill's KV cache is
+routed to a decode instance by the KV router at prefill completion and
+streamed over that (prefill, decode) pair's own ``TransferPath`` — any
+prefill instance can feed any decode instance over ici/host/disk.
+
+The event loop, transfer legs, and energy integration are the ones the
+1P:1D ``Cluster`` always ran (it is now a thin facade over this class,
+see ``repro.core.orchestrator``); the parity regression in
+``tests/test_fleet.py`` pins the 1P:1D and colocated special cases to
+the pre-fleet metrics bit-for-bit.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+from repro.configs.base import ModelConfig
+from repro.core.costs import AcceleratorSpec, CostModel, HostSpec
+from repro.core.energy import EnergyMeter
+from repro.core.engine import Engine, EngineSeq, RealExecutor
+from repro.core.kvcache import PagedKVPool
+from repro.core.request import Request, WorkloadMetrics, summarize
+from repro.core.transfer import TransferPath, make_path
+
+from .router import Router
+from .spec import FleetSpec, as_fleet_spec
+
+Phi = Union[float, Tuple[float, ...]]
+
+
+@dataclass
+class SetupResult:
+    setup: str
+    metrics: WorkloadMetrics
+    energy: EnergyMeter
+    requests: List[Request]
+    makespan_s: float
+    total_tokens: int
+
+    @property
+    def joules_per_token(self) -> float:
+        return self.energy.total_j / max(self.total_tokens, 1)
+
+
+class FleetCluster:
+    def __init__(self, spec: Union[str, FleetSpec], cfg: ModelConfig, *,
+                 acc: Optional[AcceleratorSpec] = None,
+                 host: Optional[HostSpec] = None,
+                 phi: Optional[float] = None,
+                 phi_prefill: Optional[Phi] = None,
+                 phi_decode: Optional[Phi] = None,
+                 page_size: int = 16,
+                 prefill_token_budget: int = 8192,
+                 pool_bytes: Optional[float] = None,
+                 executor_factory: Optional[Callable[
+                     [Optional[TransferPath]], RealExecutor]] = None):
+        spec = as_fleet_spec(spec)
+        if phi is not None or phi_prefill is not None \
+                or phi_decode is not None:
+            spec = spec.with_phi(phi=phi, phi_prefill=phi_prefill,
+                                 phi_decode=phi_decode)
+        self.spec = spec
+        self.setup = spec.name
+        self.cfg = cfg
+        self.acc = acc or AcceleratorSpec()
+        self.host = host or HostSpec()
+        self.cost = CostModel(cfg, self.acc, self.host)
+        self.meter = EnergyMeter()
+        pool_bytes = pool_bytes or self.acc.kv_pool_gb * 1e9
+        kv_per_tok = max(self.cost.kv_bytes_per_token, 1)
+
+        def new_pool():
+            return PagedKVPool.from_bytes(pool_bytes, kv_per_tok, page_size)
+
+        self.engines: List[Engine] = []
+        self.prefill_engines: List[Engine] = []
+        self.decode_engines: List[Engine] = []
+        # one TransferPath per (prefill, decode) pair: media with real
+        # per-connection state (disk scratch files, staging buffers)
+        # stay independent, and a future heterogeneous-media fleet only
+        # has to change this map
+        self.paths: Dict[Tuple[int, int], TransferPath] = {}
+        self._events: List = []   # heap of (t, tiebreak, fn)
+        self._counter = itertools.count()
+
+        if spec.is_colocated:
+            for i, phi_i in enumerate(spec.phis_prefill):
+                ex = executor_factory(None) if executor_factory else None
+                self.engines.append(Engine(
+                    f"acc{i}", "colocated", self.cost, new_pool(),
+                    self.meter, phi=phi_i,
+                    prefill_token_budget=prefill_token_budget, executor=ex))
+            self.prefill_engines = self.engines
+        else:
+            x, y = spec.n_prefill, spec.n_decode
+            for i in range(x):
+                for j in range(y):
+                    self.paths[(i, j)] = make_path(spec.medium, self.host)
+            # engine executors are built path-less: the (prefill, decode)
+            # pair — hence the path the real bytes travel — is only known
+            # at transfer time, so _transfer runs the pair path's
+            # store()/fetch() around the executor's payload
+            for i, phi_i in enumerate(spec.phis_prefill):
+                ex = executor_factory(None) if executor_factory else None
+                eng = Engine(f"acc{i}", "prefill", self.cost, new_pool(),
+                             self.meter, phi=phi_i,
+                             prefill_token_budget=prefill_token_budget,
+                             executor=ex, on_prefill_done=self._transfer)
+                eng.fleet_index = i
+                self.prefill_engines.append(eng)
+            for j, phi_j in enumerate(spec.phis_decode):
+                ex = executor_factory(None) if executor_factory else None
+                eng = Engine(f"acc{x + j}", "decode", self.cost, new_pool(),
+                             self.meter, phi=phi_j,
+                             prefill_token_budget=prefill_token_budget,
+                             executor=ex)
+                eng.fleet_index = j
+                # pages for transfers routed here but still in their
+                # store leg (not yet in decode_queue): the kv-free-space
+                # router subtracts this, else every prefill finishing
+                # within one store-latency window picks the same target
+                eng.inflight_kv_pages = 0
+                self.decode_engines.append(eng)
+            self.engines = self.prefill_engines + self.decode_engines
+
+        # legacy attribute: the single transfer path of a 1P:1D fleet
+        self.path: Optional[TransferPath] = self.paths.get((0, 0)) \
+            if len(self.paths) == 1 else None
+
+        self.frontend = Router(self.prefill_engines, spec.router, spec.seed)
+        self.kv_router = Router(self.decode_engines, spec.kv_router,
+                                spec.seed + 1) \
+            if self.decode_engines else None
+
+    # ------------------------------------------------------------------
+    def _push(self, t: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._events, (t, next(self._counter), fn))
+
+    # ------------------------------------------------------------------
+    def _transfer(self, engine: Engine, seq: EngineSeq, t_done: float):
+        """Store leg: runs right after prefill; pages stay held on the
+        prefill accelerator until the store completes. The decode target
+        is picked HERE (not at arrival), so the KV router sees decode
+        pool pressure at transfer time."""
+        dec = self.kv_router.pick()
+        path = self.paths[(engine.fleet_index, dec.fleet_index)]
+        nbytes = self.cost.kv_bytes(seq.ctx)
+        store = path.store_cost(nbytes)
+        fetch = path.fetch_cost(nbytes)
+        for comp, joules in store.energy_j.items():
+            self.meter.add(comp, joules, stage="transfer")
+        handle = None
+        if engine.executor is not None:
+            # real byte movement over the ROUTED pair's path (the
+            # path-less executor just packages the state payload)
+            handle = path.store(engine.executor.store(seq))
+
+        t_arrive = t_done + store.latency_s
+        seq.req.transfer_done_s = t_arrive
+        reserve = seq.ctx + (seq.req.output_len - seq.req.generated) + 1
+        inflight = dec.pool.pages_for(reserve)
+        dec.inflight_kv_pages += inflight
+
+        def deliver():
+            engine.pool.free_seq(seq.seq_id)
+            # both engines resume no earlier than the store completion:
+            # the prefill engine may have been blocked on pool space
+            engine.t = max(engine.t, t_arrive)
+            # the reservation migrates from in-flight to decode_queue,
+            # where the router's headroom counts it instead
+            dec.inflight_kv_pages -= inflight
+            payload = path.fetch(handle) if handle is not None else None
+            dec.enqueue_decode(seq, payload, fetch)
+            dec.t = max(dec.t, t_arrive)
+
+        self._push(t_arrive, deliver)
+
+    # ------------------------------------------------------------------
+    def submit(self, requests: List[Request]) -> None:
+        """Route every request through the event heap at its
+        ``arrival_s``: an engine never sees a request before it arrives
+        (submitting upfront let a staggered arrival be prefilled at t=0,
+        yielding negative TTFT), and the frontend router scores live
+        queue depths at the arrival instant rather than at submission.
+        ``Engine.submit`` fast-forwards an idle engine's clock to the
+        arrival instant; a busy engine (clock already past it) just
+        queues the request."""
+        for r in requests:
+            self._push(r.arrival_s,
+                       lambda r=r: self.frontend.pick().submit(r))
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request],
+            max_steps: int = 2_000_000) -> SetupResult:
+        self.submit(requests)
+        steps = 0
+        stalled = set()   # engines that made no progress; wait for an event
+        while steps < max_steps:
+            steps += 1
+            candidates = [e for e in self.engines
+                          if e not in stalled and e.has_work()]
+            t_next_event = self._events[0][0] if self._events else None
+            if candidates:
+                eng = min(candidates, key=lambda e: e.t)
+                # <= so an arrival at exactly the engine's clock is
+                # admitted before the step that starts at that instant
+                if t_next_event is not None and t_next_event <= eng.t:
+                    _, _, fn = heapq.heappop(self._events)
+                    fn()
+                    stalled.clear()
+                    continue
+                if not eng.step():
+                    # no progress (e.g. pool blocked by in-flight stores):
+                    # park until the next event frees resources
+                    stalled.add(eng)
+                continue
+            if self._events:
+                _, _, fn = heapq.heappop(self._events)
+                fn()
+                stalled.clear()
+                continue
+            break
+
+        unfinished = [r for r in requests if not r.done]
+        assert not unfinished, (
+            f"{self.setup}: {len(unfinished)} requests never finished "
+            f"after {steps} loop iterations (deadlock?)")
+
+        makespan = max(r.finish_s for r in requests) - \
+            min(r.arrival_s for r in requests)
+        # idle (static) accelerator power over the inference period
+        for e in self.engines:
+            idle_s = max(makespan - e.busy_s, 0.0)
+            self.meter.add_power(e.name, self.cost.idle_power_w(), idle_s,
+                                 stage="idle")
+        # host-node baseline draw (IPMI-style whole-node accounting)
+        self.meter.add_power("cpu", self.host.cpu_idle_w, makespan, "idle")
+        self.meter.add_power("dram", self.host.dram_idle_w, makespan, "idle")
+        self.meter.add_power("disk", self.host.disk_idle_w, makespan, "idle")
+
+        total_tokens = sum(r.prompt_len + r.generated for r in requests)
+        return SetupResult(setup=self.setup, metrics=summarize(requests),
+                           energy=self.meter, requests=requests,
+                           makespan_s=makespan, total_tokens=total_tokens)

@@ -1,0 +1,139 @@
+"""Load-aware request/KV routing across a fleet (P/D-Serve style).
+
+Two routing decisions exist in a disaggregated fleet and both use the
+same policy machinery:
+
+  frontend   which prefill (or colocated) instance admits an arriving
+             request — evaluated at the request's arrival event, so a
+             load-aware policy sees the live queue state;
+  kv         which decode instance receives a finished prefill's KV
+             cache — evaluated at prefill completion, so pool pressure
+             on the decode side steers the transfer.
+
+Policies (registry ``POLICIES`` / ``make_policy``):
+
+  round-robin              static rotation in arrival order; ignores
+                           load entirely (the generalization of the old
+                           ``Cluster.submit`` ``i % 2`` split, kept as
+                           the regression baseline)
+  least-outstanding-tokens pick the engine with the least queued work —
+                           remaining prefill + remaining decode tokens
+                           across every queue (``Engine.
+                           outstanding_tokens``); the FlowKV-style
+                           load-aware default for the frontend
+  kv-free-space            pick the engine whose paged KV pool has the
+                           most free pages — the natural signal for the
+                           KV transfer target, where admission is gated
+                           by pool reservations, not compute
+
+Ties are broken with a ``numpy`` Generator seeded from the spec, so a
+fleet run is reproducible from ``(spec, workload)`` alone: same seed,
+same tie-break sequence, bit-identical metrics.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Sequence
+
+import numpy as np
+
+from repro.core.engine import Engine
+
+
+class Policy:
+    """Base: ``select(engines, rng) -> engine``. Stateful policies (the
+    round-robin rotation) keep their state on the instance, so build a
+    fresh policy per router (``make_policy``)."""
+
+    name = "base"
+
+    def select(self, engines: Sequence[Engine],
+               rng: np.random.Generator) -> Engine:
+        raise NotImplementedError
+
+
+def _argmin(engines: Sequence[Engine], key: Callable[[Engine], float],
+            rng: np.random.Generator) -> Engine:
+    """Lowest score wins; exact ties resolved by the seeded generator."""
+    scores = [key(e) for e in engines]
+    best = min(scores)
+    ties = [i for i, s in enumerate(scores) if s == best]
+    if len(ties) == 1:
+        return engines[ties[0]]
+    return engines[ties[int(rng.integers(len(ties)))]]
+
+
+class RoundRobin(Policy):
+    name = "round-robin"
+
+    def __init__(self):
+        self._i = 0
+
+    def select(self, engines, rng):
+        e = engines[self._i % len(engines)]
+        self._i += 1
+        return e
+
+
+class LeastOutstandingTokens(Policy):
+    name = "least-outstanding-tokens"
+
+    def select(self, engines, rng):
+        return _argmin(engines, lambda e: e.outstanding_tokens(), rng)
+
+
+class KVFreeSpace(Policy):
+    name = "kv-free-space"
+
+    @staticmethod
+    def _headroom(e: Engine) -> int:
+        """Free pages minus reservations already routed here but not
+        yet reflected in the pool: ``decode_queue`` entries reserve
+        only at ``_admit``, and transfers still in their store leg
+        (``inflight_kv_pages``, maintained by the fleet's ``_transfer``)
+        have not even arrived — raw ``free_pages`` is blind to both, so
+        a burst of prefill completions within one store-latency window
+        would all pile onto the same instance."""
+        pending = sum(
+            e.pool.pages_for(s.ctx + (s.req.output_len - s.req.generated)
+                             + 1)
+            for s, _, _ in e.decode_queue)
+        return e.pool.free_pages - pending \
+            - getattr(e, "inflight_kv_pages", 0)
+
+    def select(self, engines, rng):
+        # most headroom == least pool pressure; negate for argmin
+        return _argmin(engines, lambda e: -self._headroom(e), rng)
+
+
+POLICIES = {
+    RoundRobin.name: RoundRobin,
+    LeastOutstandingTokens.name: LeastOutstandingTokens,
+    KVFreeSpace.name: KVFreeSpace,
+}
+
+
+def make_policy(name: str) -> Policy:
+    try:
+        cls = POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown router policy {name!r}; "
+                         f"choose from {sorted(POLICIES)}") from None
+    return cls()
+
+
+class Router:
+    """One routing decision point: a policy bound to its target engines
+    and a seeded tie-break stream."""
+
+    def __init__(self, engines: Sequence[Engine],
+                 policy: str = "least-outstanding-tokens", seed: int = 0):
+        if not engines:
+            raise ValueError("router needs >= 1 target engine")
+        self.engines: List[Engine] = list(engines)
+        self.policy = make_policy(policy)
+        self._rng = np.random.default_rng(seed)
+
+    def pick(self) -> Engine:
+        if len(self.engines) == 1:       # the 1P:1D / co-1gpu fast path
+            return self.engines[0]
+        return self.policy.select(self.engines, self._rng)

@@ -1,0 +1,205 @@
+"""FleetSpec: the shape of an xP:yD (or n-colocated) serving fleet.
+
+The paper's five experimental setups are the smallest possible fleets —
+one or two accelerators. P/D-Serve (arXiv 2408.08147) and FlowKV
+(arXiv 2504.03775) show that at production scale the interesting knobs
+are the prefill:decode instance *ratio* and how KV transfers are routed
+across the pool; ``FleetSpec`` makes both first-class. A spec is a
+frozen, hashable value object (sweep caches key on it) that fully
+determines the fleet:
+
+  * ``n_prefill`` x ``n_decode`` disaggregated instances with a KV
+    ``medium`` (ici / host / disk), every (prefill, decode) pair getting
+    its own ``TransferPath``; or ``n_colocated`` instances with no
+    transfer at all.
+  * per-instance DVFS settings: ``phi_prefill`` / ``phi_decode`` are a
+    scalar (applied to every instance of the stage) or a tuple with one
+    entry per instance — heterogeneous-frequency fleets fall out free.
+  * ``router`` (frontend: which instance prefills a request) and
+    ``kv_router`` (which decode instance receives the KV cache) name
+    policies from ``repro.fleet.router``; ``seed`` drives their
+    deterministic tie-breaking.
+
+The legacy setup names map through ``FleetSpec.from_setup``: the
+``Cluster`` facade in ``repro.core.orchestrator`` is exactly
+``FleetCluster(FleetSpec.from_setup(setup), ...)``.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, replace
+from typing import Optional, Tuple, Union
+
+# mirrors repro.core.orchestrator (defined here to keep the import
+# direction fleet <- core.orchestrator acyclic; orchestrator re-exports)
+SETUPS = ("co-1gpu", "co-2gpus", "dis-ici", "dis-host", "dis-disk")
+DIS_PATH = {"dis-ici": "ici", "dis-host": "host", "dis-disk": "disk"}
+MEDIA = ("ici", "host", "disk")
+
+Phi = Union[float, Tuple[float, ...]]
+
+
+def _canon_phi(value: Phi) -> Phi:
+    """Scalar -> float, any sequence -> tuple of floats: list-valued or
+    int-valued phis must hash and compare like their canonical twins
+    (sweep caches key on the frozen spec)."""
+    if isinstance(value, (int, float)):
+        return float(value)
+    return tuple(float(v) for v in value)
+
+
+def _per_instance(value: Phi, n: int, what: str) -> Tuple[float, ...]:
+    """Broadcast a scalar phi (or validate a per-instance tuple) to n."""
+    if isinstance(value, (int, float)):
+        vals = (float(value),) * n
+    else:
+        vals = tuple(float(v) for v in value)
+        if len(vals) != n:
+            raise ValueError(
+                f"{what}: got {len(vals)} per-instance values for "
+                f"{n} instances")
+    if any(v <= 0 for v in vals):
+        raise ValueError(f"{what}: phi must be > 0, got {vals}")
+    return vals
+
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """x prefill + y decode instances over one KV medium, or n colocated."""
+    n_prefill: int = 0
+    n_decode: int = 0
+    n_colocated: int = 0
+    medium: Optional[str] = None        # ici / host / disk (disaggregated)
+    phi_prefill: Phi = 1.0              # scalar or per-instance tuple
+    phi_decode: Phi = 1.0
+    router: str = "least-outstanding-tokens"   # frontend request routing
+    kv_router: str = "kv-free-space"           # prefill-done -> decode
+    seed: int = 0                              # tie-break determinism
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        object.__setattr__(self, "phi_prefill",
+                           _canon_phi(self.phi_prefill))
+        object.__setattr__(self, "phi_decode",
+                           _canon_phi(self.phi_decode))
+        if self.n_colocated:
+            if self.n_prefill or self.n_decode:
+                raise ValueError(
+                    "a fleet is either colocated or disaggregated: got "
+                    f"n_colocated={self.n_colocated} with "
+                    f"{self.n_prefill}P:{self.n_decode}D")
+            if self.medium is not None:
+                raise ValueError("colocated fleets have no KV medium")
+            if self.n_colocated < 1:
+                raise ValueError("n_colocated must be >= 1")
+        else:
+            if self.n_prefill < 1 or self.n_decode < 1:
+                raise ValueError(
+                    f"need >= 1 instance per stage, got "
+                    f"{self.n_prefill}P:{self.n_decode}D")
+            if self.medium not in MEDIA:
+                raise ValueError(
+                    f"disaggregated fleets need medium in {MEDIA}, "
+                    f"got {self.medium!r}")
+        # broadcast now so a malformed tuple fails at spec construction
+        self.phis_prefill
+        self.phis_decode
+
+    # ------------------------------------------------------------------
+    @property
+    def is_colocated(self) -> bool:
+        return self.n_colocated > 0
+
+    @property
+    def is_disaggregated(self) -> bool:
+        return not self.is_colocated
+
+    @property
+    def num_engines(self) -> int:
+        return self.n_colocated or (self.n_prefill + self.n_decode)
+
+    @property
+    def phis_prefill(self) -> Tuple[float, ...]:
+        n = self.n_colocated or self.n_prefill
+        return _per_instance(self.phi_prefill, n, "phi_prefill")
+
+    @property
+    def phis_decode(self) -> Tuple[float, ...]:
+        if self.is_colocated:
+            return ()
+        return _per_instance(self.phi_decode, self.n_decode, "phi_decode")
+
+    @property
+    def name(self) -> str:
+        """Sweep-row label, e.g. ``2P2D-ici`` or ``co-2``."""
+        if self.is_colocated:
+            return f"co-{self.n_colocated}"
+        return f"{self.n_prefill}P{self.n_decode}D-{self.medium}"
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def colocated(cls, n: int, **kw) -> "FleetSpec":
+        return cls(n_colocated=n, **kw)
+
+    @classmethod
+    def disaggregated(cls, n_prefill: int, n_decode: int,
+                      medium: str = "ici", **kw) -> "FleetSpec":
+        return cls(n_prefill=n_prefill, n_decode=n_decode, medium=medium,
+                   **kw)
+
+    @classmethod
+    def from_setup(cls, setup: str, **kw) -> "FleetSpec":
+        """The five legacy setups as minimal fleets (the Cluster facade)."""
+        if setup not in SETUPS:
+            raise ValueError(f"unknown setup {setup!r}; "
+                             f"choose from {SETUPS}")
+        if setup == "co-1gpu":
+            return cls.colocated(1, **kw)
+        if setup == "co-2gpus":
+            return cls.colocated(2, **kw)
+        return cls.disaggregated(1, 1, medium=DIS_PATH[setup], **kw)
+
+    _NAME_RE = re.compile(r"^(\d+)P(\d+)D-(ici|host|disk)$")
+
+    @classmethod
+    def parse(cls, name: str, **kw) -> "FleetSpec":
+        """Inverse of ``.name`` — ``"2P2D-ici"`` / ``"co-3"`` — also
+        accepting the five legacy setup names (CLI flags and sweep-row
+        labels round-trip through this)."""
+        if name in SETUPS:
+            return cls.from_setup(name, **kw)
+        if name.startswith("co-") and name[3:].isdigit():
+            return cls.colocated(int(name[3:]), **kw)
+        m = cls._NAME_RE.match(name)
+        if m:
+            return cls.disaggregated(int(m.group(1)), int(m.group(2)),
+                                     m.group(3), **kw)
+        raise ValueError(
+            f"cannot parse fleet shape {name!r}: expected a setup name "
+            f"{SETUPS}, 'co-<n>', or '<x>P<y>D-<ici|host|disk>'")
+
+    # ------------------------------------------------------------------
+    def with_phi(self, phi: Optional[float] = None,
+                 phi_prefill: Optional[Phi] = None,
+                 phi_decode: Optional[Phi] = None) -> "FleetSpec":
+        """Cluster-style frequency overrides: ``phi`` sets every stage
+        unless a stage-specific value is given (the DVFS sweeps use
+        this to re-run one spec across the frequency grid)."""
+        pp = phi_prefill if phi_prefill is not None else \
+            (phi if phi is not None else self.phi_prefill)
+        pd = phi_decode if phi_decode is not None else \
+            (phi if phi is not None else self.phi_decode)
+        return replace(self, phi_prefill=pp, phi_decode=pd)
+
+
+def as_fleet_spec(setup: Union[str, FleetSpec]) -> FleetSpec:
+    """Normalize any accepted setup form — a FleetSpec, a legacy setup
+    name, or a fleet-shape string like ``"2P2D-ici"`` / ``"co-3"``."""
+    if isinstance(setup, FleetSpec):
+        return setup
+    return FleetSpec.parse(setup)
+
+
+def setup_label(setup: Union[str, FleetSpec]) -> str:
+    """Human/sweep-row label for either form."""
+    return setup if isinstance(setup, str) else setup.name

@@ -6,8 +6,12 @@ Two modes:
   * --real: reduced config executed on CPU with real KV transfers between
     engines (correctness mode; token streams are printed/compared).
 
+``--setup`` takes a legacy setup name or any fleet shape ("2P2D-ici",
+"co-3"; see repro.fleet.FleetSpec.parse).
+
   PYTHONPATH=src python -m repro.launch.serve --arch llama32-3b \
       --setup dis-ici --batch-size 16
+  PYTHONPATH=src python -m repro.launch.serve --setup 2P2D-ici
 """
 from __future__ import annotations
 
@@ -16,7 +20,8 @@ import argparse
 import jax
 
 from repro.configs import get_config, reduce_for_smoke
-from repro.core import Cluster, RealExecutor, SETUPS, random_workload
+from repro.core import RealExecutor, SETUPS, make_cluster, random_workload
+from repro.fleet import FleetSpec
 from repro.models import get_model
 
 
@@ -40,8 +45,8 @@ def serve(arch: str, setup: str, *, batch_size: int = 16,
                            output_len=output_len,
                            vocab_size=cfg.vocab_size if real else 0,
                            seed=seed)
-    res = Cluster(setup, cfg, phi=phi,
-                  executor_factory=executor_factory).run(reqs)
+    res = make_cluster(setup, cfg, phi=phi,
+                       executor_factory=executor_factory).run(reqs)
     if verbose:
         m = res.metrics
         print(f"[serve] {setup} arch={arch} bs={batch_size} phi={phi}")
@@ -61,7 +66,9 @@ def serve(arch: str, setup: str, *, batch_size: int = 16,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama32-3b")
-    ap.add_argument("--setup", default="dis-ici", choices=SETUPS)
+    ap.add_argument("--setup", default="dis-ici",
+                    help=f"one of {SETUPS} or a fleet shape like "
+                         f"'2P2D-ici' / 'co-3'")
     ap.add_argument("--batch-size", type=int, default=16)
     ap.add_argument("--input-len", type=int, default=16_384)
     ap.add_argument("--output-len", type=int, default=256)
@@ -69,6 +76,11 @@ def main(argv=None):
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.setup not in SETUPS:
+        try:
+            FleetSpec.parse(args.setup)
+        except ValueError as e:
+            ap.error(str(e))          # usage error, not a traceback
     serve(args.arch, args.setup, batch_size=args.batch_size,
           input_len=args.input_len, output_len=args.output_len,
           phi=args.phi, real=args.real, seed=args.seed)

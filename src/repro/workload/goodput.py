@@ -48,23 +48,24 @@ def evaluate(reqs: Sequence[Request],
 RunAtRate = Callable[[float], List[Request]]
 
 
-def _default_runner(setup: str, cfg, *, lengths=None, n=24, seed=0,
+def _default_runner(setup, cfg, *, lengths=None, n=24, seed=0,
                     arrival: str = "poisson",
                     slo: Optional[SLO] = None, **cluster_kw) -> RunAtRate:
-    """rate -> finished request list on a fresh Cluster of ``setup``."""
-    from repro.core.orchestrator import Cluster
+    """rate -> finished request list on a fresh cluster of ``setup`` (a
+    legacy setup name or any ``FleetSpec`` shape)."""
+    from repro.core.orchestrator import make_cluster
     from .spec import open_loop_workload
 
     def run(rate: float) -> List[Request]:
         reqs = open_loop_workload(rate, n, lengths=lengths, slo=slo,
                                   arrival=arrival, seed=seed)
-        Cluster(setup, cfg, **cluster_kw).run(reqs)
+        make_cluster(setup, cfg, **cluster_kw).run(reqs)
         return reqs
 
     return run
 
 
-def max_goodput_rate(setup: Union[str, RunAtRate],
+def max_goodput_rate(setup: Union[str, "FleetSpec", RunAtRate],  # noqa: F821
                      cfg=None, *,
                      slo: SLO,
                      lo: float = 0.25, hi: float = 32.0,
@@ -73,10 +74,10 @@ def max_goodput_rate(setup: Union[str, RunAtRate],
                      **runner_kw) -> float:
     """Highest offered rate with SLO attainment >= ``target_attainment``.
 
-    ``setup`` is either a setup name (a fresh ``Cluster`` per probe, the
-    real sweep) or a callable ``rate -> finished requests`` (stubbed
-    cost models in tests). Assumes attainment is non-increasing in rate
-    — true of every work-conserving setup here. Returns 0.0 when even
+    ``setup`` is a setup name or ``FleetSpec`` (a fresh cluster per
+    probe, the real sweep) or a callable ``rate -> finished requests``
+    (stubbed cost models in tests). Assumes attainment is non-increasing
+    in rate — true of every work-conserving setup here. Returns 0.0 when even
     ``lo`` misses the target; returns ``hi`` when ``hi`` still attains
     it (the bracket saturated, not a fixed point).
     """

@@ -15,14 +15,19 @@ dis-disk typically never crosses at all.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.orchestrator import SETUPS, Cluster, SetupResult
+from repro.core.orchestrator import SETUPS, SetupResult, make_cluster
 from repro.core.request import SLO
+from repro.fleet.spec import FleetSpec, setup_label
 
 from .goodput import GoodputReport, evaluate
 from .lengths import LengthMix
 from .spec import open_loop_workload
+
+# every sweep knob takes either a legacy setup name or a fleet shape;
+# FleetSpec is frozen/hashable, so both forms key the goodput caches
+Setup = Union[str, FleetSpec]
 
 
 @dataclass(frozen=True)
@@ -52,18 +57,20 @@ class RatePoint:
                   "makespan_s", "j_per_token", "evictions"]
 
 
-def run_rate_point(setup: str, cfg, rate: float, *,
+def run_rate_point(setup: Setup, cfg, rate: float, *,
                    lengths: Optional[LengthMix] = None,
                    slo: Optional[SLO] = None, n: int = 24, seed: int = 0,
                    arrival: str = "poisson",
                    **cluster_kw) -> RatePoint:
-    """One grid cell: a fresh Cluster serving an open-loop workload."""
+    """One grid cell: a fresh cluster (legacy setup or fleet shape)
+    serving an open-loop workload."""
     reqs = open_loop_workload(rate, n, lengths=lengths, slo=slo,
                               arrival=arrival, seed=seed)
-    res: SetupResult = Cluster(setup, cfg, **cluster_kw).run(reqs)
+    res: SetupResult = make_cluster(setup, cfg, **cluster_kw).run(reqs)
     rep: GoodputReport = evaluate(reqs, slo)
     m = res.metrics
-    return RatePoint(setup=setup, rate=rate, attainment=rep.attainment,
+    return RatePoint(setup=setup_label(setup), rate=rate,
+                     attainment=rep.attainment,
                      goodput_rps=rep.goodput_rps,
                      offered_rps=rep.offered_rps,
                      median_ttft_s=m.median_ttft_s,
@@ -75,14 +82,15 @@ def run_rate_point(setup: str, cfg, rate: float, *,
 
 
 def rate_grid(cfg, rates: Sequence[float],
-              setups: Sequence[str] = SETUPS, **kw) -> List[RatePoint]:
-    """The full rate x setup grid (media are setups: dis-ici/host/disk)."""
+              setups: Sequence[Setup] = SETUPS, **kw) -> List[RatePoint]:
+    """The full rate x setup grid (media are setups: dis-ici/host/disk;
+    entries may be ``FleetSpec`` shapes, e.g. a P:D-ratio sweep)."""
     return [run_rate_point(s, cfg, r, **kw) for s in setups for r in rates]
 
 
 # ----------------------------------------------------------------------
-def goodput_gap(setup: str, baseline: str, cfg, rate: float,
-                cache: Optional[Dict[Tuple[str, float], float]] = None,
+def goodput_gap(setup: Setup, baseline: Setup, cfg, rate: float,
+                cache: Optional[Dict[Tuple[Setup, float], float]] = None,
                 **kw) -> float:
     """goodput(setup) - goodput(baseline) at one offered rate.
 
@@ -90,7 +98,7 @@ def goodput_gap(setup: str, baseline: str, cfg, rate: float,
     so bisections sharing a baseline (or following a ``rate_grid``) do
     not re-simulate identical cells; entries are only valid for one
     fixed (cfg, workload, slo) combination — the caller's scope."""
-    def goodput(s: str) -> float:
+    def goodput(s: Setup) -> float:
         key = (s, rate)
         if cache is not None and key in cache:
             return cache[key]
@@ -110,9 +118,9 @@ class Crossover:
     winner_above: str
 
 
-def crossover_rate(setup: str, cfg, *, baseline: str = "co-2gpus",
+def crossover_rate(setup: Setup, cfg, *, baseline: Setup = "co-2gpus",
                    lo: float, hi: float, iters: int = 5,
-                   cache: Optional[Dict[Tuple[str, float], float]] = None,
+                   cache: Optional[Dict[Tuple[Setup, float], float]] = None,
                    **kw) -> Optional[Crossover]:
     """Bisect for the offered rate where the goodput winner between
     ``setup`` and ``baseline`` flips, in either orientation.
@@ -143,6 +151,7 @@ def crossover_rate(setup: str, cfg, *, baseline: str = "co-2gpus",
         else:
             hi = mid
     mid = (lo + hi) / 2.0
+    s_label, b_label = setup_label(setup), setup_label(baseline)
     return Crossover(rate=mid,
-                     winner_below=setup if lo_wins_setup else baseline,
-                     winner_above=baseline if lo_wins_setup else setup)
+                     winner_below=s_label if lo_wins_setup else b_label,
+                     winner_above=b_label if lo_wins_setup else s_label)

@@ -144,6 +144,42 @@ def test_crossover_rate_bisection_locates_flip():
     assert c.winner_above == "dis-ici"
 
 
+def test_fleet_optimal_ratio_shifts_toward_prefill_with_prompt_len():
+    """Fleet-scale corollary of the paper's load caveat: at a fixed
+    4-instance budget, the goodput-optimal P:D ratio under the paper
+    SLOs moves toward prefill as the offered prompt length grows —
+    decode-heavy chat shapes want 1P:3D, the paper's long-prompt regime
+    wants prefill-majority fleets. (The co->dis crossover orientation of
+    ``test_load_crossover`` above is untouched: this is about splitting
+    a dis fleet, not co vs dis.)"""
+    from repro.core import make_cluster
+    from repro.fleet import FleetSpec
+    from repro.workload import PaperFixedLengths
+
+    ratios = ((1, 3), (2, 2), (3, 1))
+    ladder = [  # (prompt_len, output_len, offered rate)
+        (512, 512, 16.0),     # decode-dominated interactive shape
+        (8192, 128, 8.0),     # mixed
+        (16_384, 64, 8.0),    # the paper's long-prompt regime
+    ]
+    best_frac = []
+    for plen, olen, rate in ladder:
+        goodput = {}
+        for x, y in ratios:
+            spec = FleetSpec.disaggregated(x, y, medium="ici")
+            reqs = open_loop_workload(
+                rate, OPEN_N, lengths=PaperFixedLengths(plen, olen),
+                slo=OPEN_SLO, seed=0)
+            make_cluster(spec, CFG).run(reqs)
+            goodput[(x, y)] = evaluate(reqs, OPEN_SLO).goodput_rps
+        x, y = max(goodput, key=goodput.get)
+        best_frac.append(x / (x + y))
+    assert best_frac == sorted(best_frac), \
+        f"optimal prefill fraction not monotone in prompt len: {best_frac}"
+    assert best_frac[-1] > best_frac[0], \
+        f"no shift toward prefill: {best_frac}"
+
+
 def test_max_goodput_rate_orders_capacities():
     """Under the interference-sensitive SLO, dis-ici sustains a higher
     offered rate at >=90% attainment than co-2gpus — the same crossover
