@@ -79,6 +79,20 @@ def full_sweep(arch: str = ARCH,
     return {(s, b): run_point(s, b, arch) for s in SETUPS for b in batches}
 
 
+def write_json(payload: Dict, name: str, out: str = None) -> str:
+    """Write a figure's JSON artifact: ``name`` lands in OUT_DIR, an
+    explicit ``out`` path is honored (parent dirs created either way).
+    One helper so the artifact convention lives in one place."""
+    import json
+    path = out or os.path.join(OUT_DIR, name)
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
+    return path
+
+
 def write_csv(name: str, header: List[str], rows: List[List]) -> str:
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, name)

@@ -1,6 +1,15 @@
 """Paper Fig 5: TTFT-energy and TPOT-energy Pareto frontiers over the DVFS
 grid (batch 16, input 16,384, output 256), plus the stage-wise independent
-(phi_p, phi_d) search for the disaggregated setups."""
+(phi_p, phi_d) search for the disaggregated setups.
+
+Transfer energy is attributed per leg (store -> prefill side, fetch ->
+decode side) from the routed path's actual LegCosts — see
+``repro.core.dvfs.sweep_frequencies``.
+
+  python -m benchmarks.fig5_pareto              # full grid, CSV
+  python -m benchmarks.fig5_pareto --smoke      # CI: tiny grid + JSON
+  python -m benchmarks.fig5_pareto --out f.json # archivable JSON
+"""
 from __future__ import annotations
 
 from repro.configs import get_config
@@ -11,40 +20,45 @@ from repro.core.dvfs import (best_independent, best_total_energy,
 from . import common
 
 GRID = DEFAULT_FREQ_GRID[::2] + (1.0,)    # 6-point grid keeps runtime sane
+SMOKE_GRID = (0.42, 0.74, 1.0)
+
+HEADER = ["setup", "phi", "median_ttft_s", "prefill_energy_kj",
+          "median_tpot_ms", "decode_energy_kj"]
+HEADER2 = ["setup", "phi_prefill", "phi_decode", "ttft_s", "tpot_ms",
+           "stage_energy_kj"]
 
 
-def _wl():
-    return random_workload(16, input_len=common.INPUT_LEN,
-                           output_len=common.OUTPUT_LEN)
-
-
-def run(arch: str = common.ARCH):
+def run(arch: str = common.ARCH, *, smoke: bool = False, out: str = None):
     cfg = get_config(arch)
-    header = ["setup", "phi", "median_ttft_s", "prefill_energy_kj",
-              "median_tpot_ms", "decode_energy_kj"]
+    grid = SMOKE_GRID if smoke else GRID
+    batch = 8 if smoke else 16
+
+    def _wl():
+        return random_workload(batch, input_len=common.INPUT_LEN,
+                               output_len=common.OUTPUT_LEN)
+
     rows = []
     sweeps = {}
     for setup in SETUPS:
-        sw = sweep_frequencies(setup, cfg, _wl, freq_grid=GRID)
+        sw = sweep_frequencies(setup, cfg, _wl, freq_grid=grid)
         sweeps[setup] = sw
         for pp, dp in zip(sw.prefill_points, sw.decode_points):
             rows.append([setup, pp.phi, round(pp.latency_s, 4),
                          round(pp.energy_j / 1e3, 3),
                          round(dp.latency_s * 1e3, 3),
                          round(dp.energy_j / 1e3, 3)])
-    common.print_table("Fig 5: latency-energy Pareto points", header, rows)
-    common.write_csv("fig5_pareto.csv", header, rows)
+    common.print_table("Fig 5: latency-energy Pareto points", HEADER, rows)
+    common.write_csv("fig5_pareto.csv", HEADER, rows)
 
     # stage-wise independent frequency search (disaggregation's edge)
-    header2 = ["setup", "phi_prefill", "phi_decode", "ttft_s", "tpot_ms",
-               "stage_energy_kj"]
     rows2 = []
     for setup in SETUPS:
         if setup.startswith("co"):
             best = best_total_energy(sweeps[setup])
         else:
             recs = sweep_independent(setup, cfg, _wl,
-                                     freq_grid=GRID[::2] + (1.0,))
+                                     freq_grid=grid if smoke
+                                     else grid[::2] + (1.0,))
             b = best_independent(recs)
             best = {"phi_prefill": b["phi_prefill"],
                     "phi_decode": b["phi_decode"],
@@ -55,10 +69,52 @@ def run(arch: str = common.ARCH):
                       round(best["tpot_s"] * 1e3, 3),
                       round(best["energy_j"] / 1e3, 3)])
     common.print_table("Fig 5b: best (independent) frequency choices",
-                       header2, rows2)
-    common.write_csv("fig5_best_freq.csv", header2, rows2)
-    return rows, rows2
+                       HEADER2, rows2)
+    common.write_csv("fig5_best_freq.csv", HEADER2, rows2)
+
+    # machine-checkable JSON (same interface as fig6/fig7/fig8) --------
+    def _points(pts):
+        return [{"phi": p.phi, "latency_s": round(p.latency_s, 6),
+                 "energy_j": round(p.energy_j, 2)} for p in pts]
+
+    by_stage_best = {r[0]: {"phi_prefill": r[1], "phi_decode": r[2],
+                            "stage_energy_kj": r[5]} for r in rows2}
+    co_best = by_stage_best["co-2gpus"]["stage_energy_kj"]
+    dis_best = {s: by_stage_best[s]["stage_energy_kj"]
+                for s in SETUPS if s.startswith("dis")}
+    payload = {
+        "arch": arch, "batch": batch, "phi_grid": list(grid),
+        "input_len": common.INPUT_LEN, "output_len": common.OUTPUT_LEN,
+        "points": [dict(zip(HEADER, r)) for r in rows],
+        "best_frequency": [dict(zip(HEADER2, r)) for r in rows2],
+        "frontiers": {
+            s: {"prefill": _points(sweeps[s].prefill_frontier()),
+                "decode": _points(sweeps[s].decode_frontier())}
+            for s in SETUPS},
+        # paper takeaway 2, machine-checkable: independent (phi_p,
+        # phi_d) scaling never undercuts the colocated best
+        "no_dis_energy_win": {
+            "co_2gpus_best_kj": co_best,
+            "dis_best_kj": dis_best,
+            "holds": all(v > co_best for v in dis_best.values()),
+        },
+    }
+    common.write_json(payload, "fig5_pareto.json", out=out)
+    return payload
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=common.ARCH)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI; emits the same JSON artifact")
+    ap.add_argument("--out", default=None,
+                    help="JSON output path (default benchmarks/out/)")
+    args = ap.parse_args(argv)
+    run(args.arch, smoke=args.smoke, out=args.out)
+    return 0
 
 
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

@@ -15,9 +15,6 @@ dis-disk typically never crosses.
 """
 from __future__ import annotations
 
-import json
-import os
-
 from repro.configs import get_config
 from repro.core import SLO
 from repro.workload import (DEFAULT_INTERACTIVE_SLO, RatePoint,
@@ -76,11 +73,7 @@ def run(arch: str = common.ARCH, *, rates=None, n: int = common.OPEN_LOOP_N,
         "points": [dict(zip(RatePoint.ROW_HEADER, r)) for r in rows],
         "crossovers": crossovers,
     }
-    os.makedirs(common.OUT_DIR, exist_ok=True)
-    json_path = os.path.join(common.OUT_DIR, "fig6_load_crossover.json")
-    with open(json_path, "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"wrote {json_path}")
+    common.write_json(payload, "fig6_load_crossover.json")
     return payload
 
 

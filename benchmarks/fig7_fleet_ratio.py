@@ -15,9 +15,6 @@ scaling sanity bar, asserted by CI on the smoke JSON).
 """
 from __future__ import annotations
 
-import json
-import os
-
 from repro.configs import get_config
 from repro.core import SLO
 from repro.fleet import FleetSpec
@@ -101,11 +98,7 @@ def run(arch: str = common.ARCH, *, rates=None, n: int = common.OPEN_LOOP_N,
             "fleet_scales": bool(hi_cap > lo_cap),
         },
     }
-    os.makedirs(common.OUT_DIR, exist_ok=True)
-    json_path = os.path.join(common.OUT_DIR, "fig7_fleet_ratio.json")
-    with open(json_path, "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"wrote {json_path}")
+    common.write_json(payload, "fig7_fleet_ratio.json")
     return payload
 
 

@@ -1,7 +1,10 @@
-"""Render EXPERIMENTS.md tables from dryrun_results.json.
+"""Render EXPERIMENTS.md tables from dryrun_results.json, and the
+per-stage idle/active energy breakdown from the fig8 governor JSON.
 
   PYTHONPATH=src python -m benchmarks.report --json dryrun_results.json \
       --write-experiments
+  PYTHONPATH=src python -m benchmarks.report \
+      --energy-json benchmarks/out/fig8_governor_pareto.json
 """
 from __future__ import annotations
 
@@ -73,6 +76,34 @@ def roofline_table(recs: List[Dict]) -> str:
     return "\n".join(lines)
 
 
+ENERGY_STAGES = ("prefill", "decode", "transfer-store", "transfer-fetch")
+
+
+def energy_table(payload: Dict) -> str:
+    """Per-stage + idle/active energy columns for every (setup, rate,
+    policy) cell of a fig8 governor JSON — the breakdown that makes the
+    idle-power floor visible next to the active joules a governor can
+    actually influence."""
+    cols = " | ".join(f"{s}_j" for s in ENERGY_STAGES)
+    lines = [
+        f"| setup | rate | policy | {cols} | active_j | idle_j "
+        "| idle_frac | attain |",
+        "|---|---|---|" + "---|" * (len(ENERGY_STAGES) + 4),
+    ]
+    for r in sorted(payload["points"],
+                    key=lambda r: (r["setup"], r["rate_rps"],
+                                   r["policy"])):
+        stages = " | ".join(
+            f"{r.get('by_stage', {}).get(s, 0.0):.0f}"
+            for s in ENERGY_STAGES)
+        idle_frac = r["idle_j"] / max(r["total_j"], 1e-9)
+        lines.append(
+            f"| {r['setup']} | {r['rate_rps']} | {r['policy']} | "
+            f"{stages} | {r['active_j']:.0f} | {r['idle_j']:.0f} | "
+            f"{idle_frac:.0%} | {r['attainment']:.0%} |")
+    return "\n".join(lines)
+
+
 def fill(experiments_path: str, marker: str, content: str) -> None:
     """Idempotent fill between <!-- MARKER_BEGIN/END --> sentinels."""
     with open(experiments_path) as f:
@@ -90,8 +121,15 @@ def fill(experiments_path: str, marker: str, content: str) -> None:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="dryrun_results.json")
+    ap.add_argument("--energy-json", default=None,
+                    help="fig8 governor JSON: print the per-stage "
+                         "idle/active energy breakdown instead")
     ap.add_argument("--write-experiments", action="store_true")
     args = ap.parse_args(argv)
+    if args.energy_json:
+        with open(args.energy_json) as f:
+            print(energy_table(json.load(f)))
+        return
     with open(args.json) as f:
         recs = json.load(f)
     dt = dryrun_table(recs)

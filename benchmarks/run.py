@@ -12,7 +12,8 @@ import time
 
 from . import (common, fig1_latency, fig2_throughput, fig3_energy,
                fig4_breakdown, fig5_pareto, fig6_load_crossover,
-               reuse_bench, roofline, validate_claims)
+               fig8_governor_pareto, reuse_bench, roofline,
+               validate_claims)
 
 
 def main(argv=None) -> int:
@@ -33,8 +34,9 @@ def main(argv=None) -> int:
     fig3_energy.run(args.arch)
     fig4_breakdown.run(args.arch)
     if not args.skip_pareto:
-        fig5_pareto.run(args.arch)
+        fig5_pareto.run(args.arch, smoke=args.quick)
     fig6_load_crossover.run(args.arch, smoke=args.quick)
+    fig8_governor_pareto.run(args.arch, smoke=args.quick)
     reuse_bench.run()
     failures = validate_claims.run()
     try:

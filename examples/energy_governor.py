@@ -1,0 +1,99 @@
+"""Energy-governance demo: online DVFS governors + the idle-power floor.
+
+Serves one open-loop workload three ways (mirroring fleet_serving.py):
+
+  1. the governor story — co-2gpus vs dis-ici under static phi=1.0,
+     the queue-depth governor, and the DualScale-style SLO-slack
+     governor, showing adaptive DVFS trimming ACTIVE joules while
+     attainment holds;
+  2. the idle-floor story — the per-state (active/idle) energy split
+     from the power-state trace, showing why disaggregation stays more
+     expensive no matter the policy: it holds more accelerator-seconds
+     at static draw, which no frequency setting can scale away;
+  3. the energy-aware router — a 2-prefill fleet with one instance
+     downclocked, where the ``min-energy`` policy routes to the cheaper
+     joules-per-token instance instead of the emptier queue.
+
+  PYTHONPATH=src python examples/energy_governor.py
+  PYTHONPATH=src python examples/energy_governor.py --rate 3 --n 32
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core import make_cluster
+from repro.fleet import FleetCluster, FleetSpec
+from repro.workload import (DEFAULT_INTERACTIVE_SLO, evaluate,
+                            open_loop_workload)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama32-3b")
+    ap.add_argument("--rate", type=float, default=3.0)
+    ap.add_argument("--n", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    slo = DEFAULT_INTERACTIVE_SLO
+
+    def wl():
+        return open_loop_workload(args.rate, args.n, slo=slo,
+                                  seed=args.seed)
+
+    print(f"arch={cfg.name} rate={args.rate} req/s n={args.n} "
+          f"SLO: TTFT<={slo.ttft_s}s TPOT<={slo.tpot_s * 1e3}ms")
+
+    print("\n-- online governors vs static max frequency")
+    results = {}
+    for setup in ("co-2gpus", "dis-ici"):
+        for policy, kw in (("static-1.0", {"phi": 1.0}),
+                           ("queue-depth", {"governor": "queue-depth"}),
+                           ("slo-slack", {"governor": "slo-slack"})):
+            reqs = wl()
+            cl = make_cluster(setup, cfg, **kw)
+            res = cl.run(reqs)
+            rep = evaluate(reqs, slo)
+            decisions = sum(len(e.governor.decisions)
+                            for e in cl.engines if e.governor)
+            results[(setup, policy)] = res
+            print(f"  {setup:9s} {policy:12s} "
+                  f"E={res.energy.total_j:7.0f} J  "
+                  f"goodput={rep.goodput_rps:5.2f} req/s  "
+                  f"attain={rep.attainment:4.0%}  "
+                  f"phi-changes={decisions}")
+
+    print("\n-- the idle-power floor (per-state energy, phi=1.0 runs)")
+    for setup in ("co-2gpus", "dis-ici"):
+        res = results[(setup, "static-1.0")]
+        summary = res.energy.trace.state_summary()
+        accs = [c for c in summary if c.startswith("acc")]
+        active = sum(summary[c]["active_j"] for c in accs)
+        idle = sum(summary[c]["idle_j"] for c in accs)
+        print(f"  {setup:9s} accelerator active={active:7.0f} J  "
+              f"idle={idle:7.0f} J  (idle share "
+              f"{idle / (active + idle):4.0%})")
+    print("  expect: dis-ici's idle share exceeds co-2gpus' — the "
+          "stage-siloed engines wait on each other; that floor, not "
+          "active power, is why independent scaling can't save energy")
+
+    print("\n-- min-energy routing on a heterogeneous 2P:1D fleet")
+    for policy in ("least-outstanding-tokens", "min-energy"):
+        spec = FleetSpec.disaggregated(2, 1, medium="ici",
+                                       phi_prefill=(1.0, 0.58),
+                                       router=policy)
+        reqs = wl()
+        cl = FleetCluster(spec, cfg)
+        res = cl.run(reqs)
+        rep = evaluate(reqs, slo)
+        share = [round(e.busy_s, 1) for e in cl.prefill_engines]
+        print(f"  {policy:24s} E={res.energy.total_j:7.0f} J  "
+              f"goodput={rep.goodput_rps:5.2f}  "
+              f"prefill busy_s fast/slow={share}")
+    print("  expect: min-energy shifts work toward the downclocked "
+          "instance (cheaper joules per token), trading a little "
+          "latency for total energy")
+
+
+if __name__ == "__main__":
+    main()

@@ -181,6 +181,48 @@ class CostModel:
                         memory_s=bytes_moved / self.acc.hbm_bw)
 
     # ------------------------------------------------------------------
+    # first-order per-token rates: the signals online governors and the
+    # min-energy router act on (full-precision projections would mean
+    # simulating the future; these are roofline steady-states)
+    # ------------------------------------------------------------------
+    def prefill_rate_tok_s(self, phi: float = 1.0,
+                           chunk: int = 8192) -> float:
+        """Steady-state prefill throughput at ``phi``: one full
+        ``chunk``-token scheduler step amortizing a single weight
+        stream, context term at zero (optimistic for long prompts —
+        callers carry a safety factor)."""
+        c = self.prefill_step_cost([(chunk, 0, chunk)])
+        return chunk / c.time(phi)
+
+    def prefill_time_s(self, tokens: int, ctx_begin: int = 0,
+                       phi: float = 1.0, chunk: int = 8192) -> float:
+        """Latency to prefill ``tokens`` starting at absolute context
+        ``ctx_begin``, chunked the way the engine actually schedules it
+        (one weight stream per ``chunk``-token step, causal attention
+        over the growing context) — the governor's TTFT projection."""
+        t = 0.0
+        pos = ctx_begin
+        end = ctx_begin + tokens
+        while pos < end:
+            take = min(chunk, end - pos)
+            t += self.prefill_step_cost([(take, pos, pos + take)]).time(phi)
+            pos += take
+        return t
+
+    def joules_per_token(self, phi: float = 1.0, chunk: int = 8192,
+                         ctx_tokens: int = 0) -> float:
+        """Projected marginal joules per prefill-equivalent token at
+        ``phi``: step power (static + utilization-scaled dynamic) over
+        the steady-state token rate. Monotone pieces pull opposite ways
+        — dynamic J/token grows ~phi^2, static J/token shrinks as 1/phi
+        on compute-bound steps — which is exactly the U-curve the
+        min-energy router and fig8 trade along."""
+        c = self.prefill_step_cost([(chunk, ctx_tokens,
+                                     ctx_tokens + chunk)])
+        t = c.time(phi)
+        return self.power_w(phi, c.utilization(phi)) * t / chunk
+
+    # ------------------------------------------------------------------
     def kv_bytes(self, ctx_tokens: int) -> int:
         """Handoff payload for one sequence at context length ctx."""
         return self.kv_bytes_per_token * ctx_tokens + self.state_bytes

@@ -65,15 +65,21 @@ def sweep_frequencies(setup: Setup, cfg: ModelConfig,
             _materialize(workload))
         e_prefill = res.energy.by_stage.get("prefill", 0.0)
         e_decode = res.energy.by_stage.get("decode", 0.0)
-        e_transfer = res.energy.by_stage.get("transfer", 0.0)
-        # transfer legs belong to the handoff: attribute the store to
-        # prefill-side energy and the fetch to decode-side energy evenly
+        # each handoff leg is attributed to the stage that runs it,
+        # using the routed TransferPath's actual LegCosts (tagged at the
+        # call sites): the STORE leg is driven by the prefill side, the
+        # FETCH leg occupies the decode engine at admission. The old
+        # 50/50 split was arbitrary and visibly wrong for asymmetric
+        # media — ici stores device-to-device and fetches for free, disk
+        # pays different write/read bandwidths per leg.
+        e_store = res.energy.by_stage.get("transfer-store", 0.0)
+        e_fetch = res.energy.by_stage.get("transfer-fetch", 0.0)
         prefill_pts.append(ParetoPoint(
             phi=phi, latency_s=res.metrics.median_ttft_s,
-            energy_j=e_prefill + 0.5 * e_transfer, label=label))
+            energy_j=e_prefill + e_store, label=label))
         decode_pts.append(ParetoPoint(
             phi=phi, latency_s=res.metrics.median_tpot_s,
-            energy_j=e_decode + 0.5 * e_transfer, label=label))
+            energy_j=e_decode + e_fetch, label=label))
         results[phi] = res
     return FrequencySweep(setup=label, prefill_points=prefill_pts,
                           decode_points=decode_pts, results=results)
@@ -103,7 +109,10 @@ def sweep_independent(setup: Setup, cfg: ModelConfig,
                 "tpot_s": res.metrics.median_tpot_s,
                 "energy_j": (res.energy.by_stage.get("prefill", 0.0)
                              + res.energy.by_stage.get("decode", 0.0)
-                             + res.energy.by_stage.get("transfer", 0.0)),
+                             + res.energy.by_stage.get("transfer-store",
+                                                       0.0)
+                             + res.energy.by_stage.get("transfer-fetch",
+                                                       0.0)),
                 "total_energy_j": res.energy.total_j,
             })
     return records

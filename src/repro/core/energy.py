@@ -7,6 +7,10 @@ plus "cpu", "dram", "disk", "ici"/"pcie" transfer media.
 
 Accelerator busy intervals are logged with (phi, utilization) so the DVFS
 study (Experiment 2) can attribute stage-wise energy at each frequency.
+When a ``PowerTrace`` is attached (every ``FleetCluster`` run attaches
+one), timestamped ``add_power`` calls additionally append power samples,
+giving each component a plottable idle/active power timeline
+(``repro.govern.telemetry``, DESIGN.md section 11).
 """
 from __future__ import annotations
 
@@ -14,22 +18,32 @@ import collections
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from repro.govern.telemetry import ACTIVE, IDLE, PowerTrace
+
 
 @dataclass
 class EnergyMeter:
     joules: Dict[str, float] = field(
         default_factory=lambda: collections.defaultdict(float))
-    # per-stage attribution (prefill / decode / transfer / idle)
+    # per-stage attribution (prefill / decode / transfer-store /
+    # transfer-fetch / idle)
     by_stage: Dict[str, float] = field(
         default_factory=lambda: collections.defaultdict(float))
+    # optional sampled power timeline; purely observational — the joule
+    # totals above are accumulated by the identical call sequence
+    # whether or not a trace is attached (golden parity stays bit-exact)
+    trace: Optional[PowerTrace] = None
 
     def add(self, component: str, joules: float, stage: str = "other"):
         self.joules[component] += joules
         self.by_stage[stage] += joules
 
     def add_power(self, component: str, watts: float, seconds: float,
-                  stage: str = "other"):
+                  stage: str = "other", t0: Optional[float] = None):
         self.add(component, watts * seconds, stage)
+        if self.trace is not None and t0 is not None:
+            self.trace.record(component, t0, t0 + seconds, watts, stage,
+                              state=IDLE if stage == "idle" else ACTIVE)
 
     @property
     def total_j(self) -> float:

@@ -73,6 +73,10 @@ class Engine:
         self.phi = phi
         self.budget = prefill_token_budget
         self.executor = executor
+        # online DVFS controller (repro.govern): set by the cluster;
+        # invoked at the top of every scheduler step. None = no retuning
+        # (identical to the default StaticGovernor).
+        self.governor = None
         self.on_prefill_done = on_prefill_done   # (engine, seq, t) -> None
         # KV reuse (paper section II-C): prefill work for matched tokens is
         # skipped. Simulation-only — in real mode the matched KV bytes are
@@ -180,6 +184,10 @@ class Engine:
     # one scheduler step; returns True if any progress was made
     # ------------------------------------------------------------------
     def step(self) -> bool:
+        if self.governor is not None:
+            # retune phi from live signals BEFORE the step so the step's
+            # timing and power integrate at the decided frequency
+            self.governor.on_step(self)
         self._admit()
         if self.pending_fetch:
             self._fetch_step()
@@ -195,7 +203,7 @@ class Engine:
         dt = cost.time(self.phi)
         util = cost.utilization(self.phi)
         self.meter.add_power(self.name, self.cost.power_w(self.phi, util),
-                             dt, stage=stage)
+                             dt, stage=stage, t0=self.t)
         self.t += dt
         self.busy_s += dt
         self.steps += 1
@@ -205,11 +213,17 @@ class Engine:
     def _fetch_step(self) -> float:
         """Run the KV fetch leg for one admitted sequence (decode role)."""
         seq, handle, leg = self.pending_fetch.popleft()
+        # the fetch leg belongs to the DECODE side of the handoff: its
+        # joules (and the engine-occupancy power below) are tagged
+        # transfer-fetch so the DVFS sweeps attribute them to decode
+        # energy, per the routed path's actual LegCost (the store leg is
+        # tagged transfer-store by the fleet's _transfer)
         for comp, joules in leg.energy_j.items():
-            self.meter.add(comp, joules, stage="transfer")
+            self.meter.add(comp, joules, stage="transfer-fetch")
         # the engine is occupied while the fetch lands in its HBM
         self.meter.add_power(self.name, self.cost.idle_power_w(),
-                             leg.latency_s, stage="transfer")
+                             leg.latency_s, stage="transfer-fetch",
+                             t0=self.t)
         self.t += leg.latency_s
         self.busy_s += leg.latency_s
         if self.executor is not None and handle is not None:

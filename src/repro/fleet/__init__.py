@@ -15,15 +15,15 @@ The legacy ``Cluster`` is a 1-2 instance facade over this subsystem.
 import repro.core  # noqa: F401  (import-order side effect only)
 
 from .cluster import FleetCluster, SetupResult
-from .router import (KVFreeSpace, LeastOutstandingTokens, POLICIES, Policy,
-                     RoundRobin, Router, make_policy)
+from .router import (KVFreeSpace, LeastOutstandingTokens, MinEnergy,
+                     POLICIES, Policy, RoundRobin, Router, make_policy)
 from .spec import (DIS_PATH, MEDIA, SETUPS, FleetSpec, as_fleet_spec,
                    setup_label)
 
 __all__ = [
     "FleetCluster", "SetupResult",
     "Router", "Policy", "RoundRobin", "LeastOutstandingTokens",
-    "KVFreeSpace", "POLICIES", "make_policy",
+    "KVFreeSpace", "MinEnergy", "POLICIES", "make_policy",
     "FleetSpec", "as_fleet_spec", "setup_label",
     "SETUPS", "DIS_PATH", "MEDIA",
 ]

@@ -30,6 +30,8 @@ from repro.core.engine import Engine, EngineSeq, RealExecutor
 from repro.core.kvcache import PagedKVPool
 from repro.core.request import Request, WorkloadMetrics, summarize
 from repro.core.transfer import TransferPath, make_path
+from repro.govern import make_governor
+from repro.govern.telemetry import PowerTrace
 
 from .router import Router
 from .spec import FleetSpec, as_fleet_spec
@@ -58,6 +60,7 @@ class FleetCluster:
                  phi: Optional[float] = None,
                  phi_prefill: Optional[Phi] = None,
                  phi_decode: Optional[Phi] = None,
+                 governor: Optional[Union[str, Tuple[str, ...]]] = None,
                  page_size: int = 16,
                  prefill_token_budget: int = 8192,
                  pool_bytes: Optional[float] = None,
@@ -68,13 +71,21 @@ class FleetCluster:
                 or phi_decode is not None:
             spec = spec.with_phi(phi=phi, phi_prefill=phi_prefill,
                                  phi_decode=phi_decode)
+        if governor is not None:
+            # sweep-plumbing override, mirroring the phi kwargs: any
+            # entry point taking **cluster_kw can run a governor
+            from dataclasses import replace
+            spec = replace(spec, governor=governor)
         self.spec = spec
         self.setup = spec.name
         self.cfg = cfg
         self.acc = acc or AcceleratorSpec()
         self.host = host or HostSpec()
         self.cost = CostModel(cfg, self.acc, self.host)
-        self.meter = EnergyMeter()
+        # every run carries a power-state timeline (repro.govern): the
+        # trace is observational — joule totals use the same call
+        # sequence with or without it, so parity goldens stay bit-exact
+        self.meter = EnergyMeter(trace=PowerTrace())
         pool_bytes = pool_bytes or self.acc.kv_pool_gb * 1e9
         kv_per_tok = max(self.cost.kv_bytes_per_token, 1)
 
@@ -132,6 +143,15 @@ class FleetCluster:
                 self.decode_engines.append(eng)
             self.engines = self.prefill_engines + self.decode_engines
 
+        # one governor instance per engine (controllers are stateful;
+        # per-engine seeds keep any future stochastic policy decoupled
+        # across instances). The default StaticGovernor keeps the
+        # spec-configured phi — a no-op on the timing/energy stream.
+        for idx, (eng, gname) in enumerate(zip(self.engines,
+                                               spec.governors)):
+            eng.governor = make_governor(gname,
+                                         seed=spec.seed + 1000 + idx)
+
         # legacy attribute: the single transfer path of a 1P:1D fleet
         self.path: Optional[TransferPath] = self.paths.get((0, 0)) \
             if len(self.paths) == 1 else None
@@ -156,8 +176,12 @@ class FleetCluster:
         nbytes = self.cost.kv_bytes(seq.ctx)
         store = path.store_cost(nbytes)
         fetch = path.fetch_cost(nbytes)
+        # the store leg belongs to the PREFILL side of the handoff
+        # (transfer-fetch is added by the decode engine at admission):
+        # the DVFS sweeps attribute each leg's joules to its stage from
+        # the routed pair's actual LegCost, not an arbitrary 50/50 split
         for comp, joules in store.energy_j.items():
-            self.meter.add(comp, joules, stage="transfer")
+            self.meter.add(comp, joules, stage="transfer-store")
         handle = None
         if engine.executor is not None:
             # real byte movement over the ROUTED pair's path (the
@@ -235,17 +259,29 @@ class FleetCluster:
             f"{self.setup}: {len(unfinished)} requests never finished "
             f"after {steps} loop iterations (deadlock?)")
 
-        makespan = max(r.finish_s for r in requests) - \
-            min(r.arrival_s for r in requests)
-        # idle (static) accelerator power over the inference period
+        t_start = min(r.arrival_s for r in requests)
+        t_end = max(r.finish_s for r in requests)
+        makespan = t_end - t_start
+        # idle (static) accelerator power over the inference period; the
+        # joule lump keeps the exact pre-trace arithmetic (parity
+        # goldens), while fill_idle writes the same idle power into the
+        # timeline gap-by-gap so each accelerator's power-state trace
+        # covers the whole run span
+        trace = self.meter.trace
         for e in self.engines:
             idle_s = max(makespan - e.busy_s, 0.0)
             self.meter.add_power(e.name, self.cost.idle_power_w(), idle_s,
                                  stage="idle")
+            if trace is not None:
+                trace.fill_idle(e.name, t_start, t_end,
+                                self.cost.idle_power_w())
         # host-node baseline draw (IPMI-style whole-node accounting)
-        self.meter.add_power("cpu", self.host.cpu_idle_w, makespan, "idle")
-        self.meter.add_power("dram", self.host.dram_idle_w, makespan, "idle")
-        self.meter.add_power("disk", self.host.disk_idle_w, makespan, "idle")
+        self.meter.add_power("cpu", self.host.cpu_idle_w, makespan, "idle",
+                             t0=t_start)
+        self.meter.add_power("dram", self.host.dram_idle_w, makespan,
+                             "idle", t0=t_start)
+        self.meter.add_power("disk", self.host.disk_idle_w, makespan,
+                             "idle", t0=t_start)
 
         total_tokens = sum(r.prompt_len + r.generated for r in requests)
         return SetupResult(setup=self.setup, metrics=summarize(requests),

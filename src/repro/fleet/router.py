@@ -25,6 +25,12 @@ Policies (registry ``POLICIES`` / ``make_policy``):
                            most free pages — the natural signal for the
                            KV transfer target, where admission is gated
                            by pool reservations, not compute
+  min-energy               pick the engine with the least projected
+                           joules to absorb the work: the cost model's
+                           per-token energy at the instance's CURRENT
+                           phi (a governor may have downclocked it)
+                           times its outstanding backlog — the
+                           energy-aware policy fig8's fleet runs use
 
 Ties are broken with a ``numpy`` Generator seeded from the spec, so a
 fleet run is reproducible from ``(spec, workload)`` alone: same seed,
@@ -105,10 +111,33 @@ class KVFreeSpace(Policy):
         return _argmin(engines, lambda e: -self._headroom(e), rng)
 
 
+class MinEnergy(Policy):
+    """Energy-aware routing (DESIGN.md section 11): fold each
+    candidate's power state and projected joules-per-token into the
+    score. The projection is first-order — ``CostModel.
+    joules_per_token`` at the instance's *current* phi (so an instance a
+    governor has parked at a low clock, whose marginal token is cheap,
+    is preferred) times the tokens it would have to serve before going
+    idle (its backlog + the new unit of work). Queue depth therefore
+    still matters, but through the energy lens: a busy-but-efficient
+    instance can beat an idle-but-pinned-at-phi-1.0 one."""
+
+    name = "min-energy"
+
+    @staticmethod
+    def _projected_j(e: Engine) -> float:
+        return e.cost.joules_per_token(e.phi, chunk=e.budget) \
+            * (e.outstanding_tokens() + 1)
+
+    def select(self, engines, rng):
+        return _argmin(engines, self._projected_j, rng)
+
+
 POLICIES = {
     RoundRobin.name: RoundRobin,
     LeastOutstandingTokens.name: LeastOutstandingTokens,
     KVFreeSpace.name: KVFreeSpace,
+    MinEnergy.name: MinEnergy,
 }
 
 

@@ -75,6 +75,11 @@ class FleetSpec:
     router: str = "least-outstanding-tokens"   # frontend request routing
     kv_router: str = "kv-free-space"           # prefill-done -> decode
     seed: int = 0                              # tie-break determinism
+    # online DVFS controller per instance (repro.govern): a registry
+    # name applied to every engine, or a tuple with one name per engine
+    # (prefill instances first, then decode). "static" keeps the
+    # configured phi — bit-identical to pre-governor behavior.
+    governor: Union[str, Tuple[str, ...]] = "static"
 
     # ------------------------------------------------------------------
     def __post_init__(self):
@@ -101,9 +106,13 @@ class FleetSpec:
                 raise ValueError(
                     f"disaggregated fleets need medium in {MEDIA}, "
                     f"got {self.medium!r}")
+        if not isinstance(self.governor, str):
+            object.__setattr__(self, "governor",
+                               tuple(str(g) for g in self.governor))
         # broadcast now so a malformed tuple fails at spec construction
         self.phis_prefill
         self.phis_decode
+        self.governors
 
     # ------------------------------------------------------------------
     @property
@@ -128,6 +137,21 @@ class FleetSpec:
         if self.is_colocated:
             return ()
         return _per_instance(self.phi_decode, self.n_decode, "phi_decode")
+
+    @property
+    def governors(self) -> Tuple[str, ...]:
+        """Per-engine governor names, broadcast like the phis (engine
+        order: prefill instances, then decode; or the colocated set).
+        Name validity is checked by ``repro.govern.make_governor`` at
+        cluster construction, keeping this module import-light."""
+        n = self.num_engines
+        if isinstance(self.governor, str):
+            return (self.governor,) * n
+        if len(self.governor) != n:
+            raise ValueError(
+                f"governor: got {len(self.governor)} per-instance names "
+                f"for {n} engines")
+        return self.governor
 
     @property
     def name(self) -> str:

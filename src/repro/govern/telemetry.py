@@ -1,0 +1,173 @@
+"""Power-state telemetry: per-component time-series power traces.
+
+The paper measures power with pynvml / RAPL / IPMI *samplers* — a power
+timeline, not just integrated joules — and its central energy finding is
+about the shape of that timeline: disaggregated serving keeps more
+accelerator-seconds in the idle state (static draw with no work), so its
+integrated energy stays higher even when stage-wise DVFS trims the
+active draw. ``PowerTrace`` is the simulation analogue of that sampler:
+every ``EnergyMeter.add_power`` call that knows *when* its interval
+happened appends a ``PowerSample``; after a run the cluster fills each
+accelerator's uncovered gaps with explicit idle-state samples, so the
+idle-energy floor becomes a first-class, plottable quantity
+(``energy_j(state="idle")``, ``timeline()``).
+
+This module is dependency-free (stdlib + numpy only): ``repro.core``
+imports it, so it must not import ``repro.core`` back.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+ACTIVE, IDLE = "active", "idle"
+
+
+@dataclass(frozen=True)
+class PowerSample:
+    """One sampled interval of constant power draw on one component."""
+    component: str
+    t0: float
+    t1: float
+    watts: float
+    stage: str              # prefill / decode / transfer-* / idle / other
+    state: str = ACTIVE     # "active" (work) or "idle" (static floor)
+
+    @property
+    def seconds(self) -> float:
+        return self.t1 - self.t0
+
+    @property
+    def joules(self) -> float:
+        return self.watts * self.seconds
+
+
+class PowerTrace:
+    """Append-only per-component power timeline.
+
+    Purely observational: the authoritative joule totals live in
+    ``EnergyMeter.joules`` (identical call sequence as before traces
+    existed, so golden-metric parity is bit-exact); the trace is the
+    sampled view a plotter or governor post-mortem reads. The two agree
+    to fp rounding wherever an interval was recorded with a timestamp.
+    """
+
+    def __init__(self):
+        self.samples: Dict[str, List[PowerSample]] = \
+            collections.defaultdict(list)
+
+    # ------------------------------------------------------------------
+    def record(self, component: str, t0: float, t1: float, watts: float,
+               stage: str = "other", state: str = ACTIVE) -> None:
+        if t1 <= t0:
+            return                      # zero-length interval: nothing
+        self.samples[component].append(
+            PowerSample(component, t0, t1, watts, stage, state))
+
+    @property
+    def components(self) -> List[str]:
+        return sorted(self.samples)
+
+    # ------------------------------------------------------------------
+    def intervals(self, component: str) -> List[Tuple[float, float]]:
+        """Covered (t0, t1) intervals, merged and sorted."""
+        ivs = sorted((s.t0, s.t1) for s in self.samples.get(component, []))
+        merged: List[Tuple[float, float]] = []
+        for t0, t1 in ivs:
+            if merged and t0 <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], t1))
+            else:
+                merged.append((t0, t1))
+        return merged
+
+    def gaps(self, component: str, t0: float,
+             t1: float) -> List[Tuple[float, float]]:
+        """Sub-intervals of [t0, t1] with no sample on ``component``."""
+        out: List[Tuple[float, float]] = []
+        cursor = t0
+        for a, b in self.intervals(component):
+            if b <= t0:
+                continue
+            if a >= t1:
+                break
+            if a > cursor:
+                out.append((cursor, min(a, t1)))
+            cursor = max(cursor, b)
+        if cursor < t1:
+            out.append((cursor, t1))
+        return out
+
+    def fill_idle(self, component: str, t0: float, t1: float,
+                  idle_watts: float, stage: str = "idle") -> float:
+        """Record an idle-state sample over every uncovered gap of
+        [t0, t1]; returns the idle seconds filled. This is how the
+        cluster turns 'makespan minus busy' into an explicit power-state
+        timeline after a run."""
+        filled = 0.0
+        for a, b in self.gaps(component, t0, t1):
+            self.record(component, a, b, idle_watts, stage, state=IDLE)
+            filled += b - a
+        return filled
+
+    # ------------------------------------------------------------------
+    def energy_j(self, component: Optional[str] = None,
+                 state: Optional[str] = None) -> float:
+        """Trace-integrated joules, filterable by component / state."""
+        comps = [component] if component is not None else self.components
+        return sum(s.joules
+                   for c in comps for s in self.samples.get(c, [])
+                   if state is None or s.state == state)
+
+    def busy_s(self, component: str) -> float:
+        return sum(s.seconds for s in self.samples.get(component, [])
+                   if s.state == ACTIVE)
+
+    def span(self, component: str) -> Tuple[float, float]:
+        ss = self.samples.get(component, [])
+        if not ss:
+            return (0.0, 0.0)
+        return (min(s.t0 for s in ss), max(s.t1 for s in ss))
+
+    def covers(self, component: str, t0: float, t1: float,
+               tol: float = 1e-9) -> bool:
+        """True when [t0, t1] has no uncovered gap wider than ``tol``."""
+        return all(b - a <= tol for a, b in self.gaps(component, t0, t1))
+
+    # ------------------------------------------------------------------
+    def timeline(self, component: str, n: int = 200
+                 ) -> Tuple[List[float], List[float]]:
+        """(times, watts) resampled on an ``n``-point uniform grid over
+        the component's span — the plottable power curve. Overlapping
+        samples (they should not happen for an accelerator, which has
+        one clock) sum, matching the energy integral."""
+        t0, t1 = self.span(component)
+        if t1 <= t0:
+            return ([], [])
+        step = (t1 - t0) / n
+        times = [t0 + (i + 0.5) * step for i in range(n)]
+        watts = [0.0] * n
+        for s in self.samples.get(component, []):
+            # uniform grid: each sample covers a contiguous index range
+            # (O(samples + n) total, not O(samples * n))
+            lo = max(0, int((s.t0 - t0) / step) - 1)
+            hi = min(n - 1, int((s.t1 - t0) / step) + 1)
+            for i in range(lo, hi + 1):
+                if s.t0 <= times[i] < s.t1:
+                    watts[i] += s.watts
+        return (times, watts)
+
+    # ------------------------------------------------------------------
+    def state_summary(self) -> Dict[str, Dict[str, float]]:
+        """{component: {"active_j", "idle_j", "active_s", "idle_s"}} —
+        the idle-floor table fig8 and the energy report print."""
+        out: Dict[str, Dict[str, float]] = {}
+        for c in self.components:
+            row = {"active_j": 0.0, "idle_j": 0.0,
+                   "active_s": 0.0, "idle_s": 0.0}
+            for s in self.samples[c]:
+                key = "active" if s.state == ACTIVE else "idle"
+                row[f"{key}_j"] += s.joules
+                row[f"{key}_s"] += s.seconds
+            out[c] = row
+        return out

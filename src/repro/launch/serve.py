@@ -27,8 +27,8 @@ from repro.models import get_model
 
 def serve(arch: str, setup: str, *, batch_size: int = 16,
           input_len: int = 16_384, output_len: int = 256,
-          phi: float = 1.0, real: bool = False, seed: int = 0,
-          verbose: bool = True):
+          phi: float = 1.0, governor: str = None, real: bool = False,
+          seed: int = 0, verbose: bool = True):
     cfg = get_config(arch)
     executor_factory = None
     if real:
@@ -45,11 +45,14 @@ def serve(arch: str, setup: str, *, batch_size: int = 16,
                            output_len=output_len,
                            vocab_size=cfg.vocab_size if real else 0,
                            seed=seed)
+    kw = {"governor": governor} if governor else {}
     res = make_cluster(setup, cfg, phi=phi,
-                       executor_factory=executor_factory).run(reqs)
+                       executor_factory=executor_factory, **kw).run(reqs)
     if verbose:
         m = res.metrics
-        print(f"[serve] {setup} arch={arch} bs={batch_size} phi={phi}")
+        gov = f" governor={governor}" if governor else ""
+        print(f"[serve] {setup} arch={arch} bs={batch_size} "
+              f"phi={phi}{gov}")
         print(f"  median TTFT {m.median_ttft_s:.3f}s  "
               f"median TPOT {m.median_tpot_s * 1e3:.2f}ms")
         print(f"  prefill tput {m.prefill_throughput_tok_s:.0f} tok/s  "
@@ -73,6 +76,9 @@ def main(argv=None):
     ap.add_argument("--input-len", type=int, default=16_384)
     ap.add_argument("--output-len", type=int, default=256)
     ap.add_argument("--phi", type=float, default=1.0)
+    ap.add_argument("--governor", default=None,
+                    help="online DVFS governor (repro.govern): "
+                         "static / queue-depth / slo-slack")
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -83,7 +89,8 @@ def main(argv=None):
             ap.error(str(e))          # usage error, not a traceback
     serve(args.arch, args.setup, batch_size=args.batch_size,
           input_len=args.input_len, output_len=args.output_len,
-          phi=args.phi, real=args.real, seed=args.seed)
+          phi=args.phi, governor=args.governor, real=args.real,
+          seed=args.seed)
 
 
 if __name__ == "__main__":

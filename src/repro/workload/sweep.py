@@ -43,6 +43,10 @@ class RatePoint:
     makespan_s: float
     joules_per_token: float
     total_evictions: int
+    # energy view (repro.govern): totals + the idle-state share, so
+    # rate sweeps expose the idle-power floor alongside goodput
+    total_j: float = 0.0
+    idle_j: float = 0.0
 
     def as_row(self) -> List:
         return [self.setup, self.rate, round(self.attainment, 4),
@@ -50,11 +54,13 @@ class RatePoint:
                 round(self.p99_ttft_s, 4),
                 round(self.median_tpot_s * 1e3, 3),
                 round(self.makespan_s, 2),
-                round(self.joules_per_token, 4), self.total_evictions]
+                round(self.joules_per_token, 4), self.total_evictions,
+                round(self.total_j, 2), round(self.idle_j, 2)]
 
     ROW_HEADER = ["setup", "rate_rps", "slo_attainment", "goodput_rps",
                   "median_ttft_s", "p99_ttft_s", "median_tpot_ms",
-                  "makespan_s", "j_per_token", "evictions"]
+                  "makespan_s", "j_per_token", "evictions",
+                  "total_j", "idle_j"]
 
 
 def run_rate_point(setup: Setup, cfg, rate: float, *,
@@ -78,7 +84,9 @@ def run_rate_point(setup: Setup, cfg, rate: float, *,
                      median_tpot_s=m.median_tpot_s,
                      makespan_s=m.makespan_s,
                      joules_per_token=res.joules_per_token,
-                     total_evictions=m.total_evictions)
+                     total_evictions=m.total_evictions,
+                     total_j=res.energy.total_j,
+                     idle_j=res.energy.by_stage.get("idle", 0.0))
 
 
 def rate_grid(cfg, rates: Sequence[float],

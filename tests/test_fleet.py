@@ -133,7 +133,7 @@ def test_unknown_policy_rejected():
     with pytest.raises(ValueError):
         make_policy("most-vibes")
     assert set(POLICIES) == {"round-robin", "least-outstanding-tokens",
-                             "kv-free-space"}
+                             "kv-free-space", "min-energy"}
 
 
 def test_engine_outstanding_tokens_is_role_aware():

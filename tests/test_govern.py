@@ -1,0 +1,288 @@
+"""repro.govern: power-state telemetry, online DVFS governors, the
+min-energy router, and the energy-accounting invariants (ISSUE 4).
+
+The load-bearing regression: the default StaticGovernor runs inside the
+event loop on EVERY cluster and must be bit-identical to pre-governor
+behavior (the goldens in test_fleet.py also pin this) and to the
+offline ``sweep_frequencies`` grid."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import Cluster, make_cluster, summarize
+from repro.core.costs import DEFAULT_FREQ_GRID, CostModel
+from repro.core.dvfs import sweep_frequencies
+from repro.fleet import FleetCluster, FleetSpec, POLICIES, Router
+from repro.govern import (GOVERNORS, PowerTrace, QueueDepthGovernor,
+                          SLOSlackGovernor, StaticGovernor, make_governor)
+from repro.workload import (DEFAULT_INTERACTIVE_SLO, PaperFixedLengths,
+                            evaluate, open_loop_workload)
+
+from hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
+
+CFG = get_config("llama32-3b")
+SLO = DEFAULT_INTERACTIVE_SLO
+
+
+# ----------------------------------------------------------------------
+# PowerTrace
+# ----------------------------------------------------------------------
+def test_trace_records_and_integrates():
+    tr = PowerTrace()
+    tr.record("acc0", 0.0, 2.0, 100.0, "prefill")
+    tr.record("acc0", 3.0, 4.0, 50.0, "decode")
+    assert tr.energy_j("acc0") == pytest.approx(250.0)
+    assert tr.busy_s("acc0") == pytest.approx(3.0)
+    assert tr.span("acc0") == (0.0, 4.0)
+    assert tr.gaps("acc0", 0.0, 4.0) == [(2.0, 3.0)]
+    tr.record("acc0", 0.0, 0.0, 999.0, "noop")   # zero-length: dropped
+    assert tr.energy_j("acc0") == pytest.approx(250.0)
+
+
+def test_trace_fill_idle_covers_span():
+    tr = PowerTrace()
+    tr.record("acc0", 1.0, 2.0, 100.0, "prefill")
+    filled = tr.fill_idle("acc0", 0.0, 5.0, 10.0)
+    assert filled == pytest.approx(4.0)
+    assert tr.covers("acc0", 0.0, 5.0)
+    assert tr.energy_j("acc0", state="idle") == pytest.approx(40.0)
+    assert tr.energy_j("acc0", state="active") == pytest.approx(100.0)
+    s = tr.state_summary()["acc0"]
+    assert s["idle_s"] == pytest.approx(4.0)
+    assert s["active_s"] == pytest.approx(1.0)
+
+
+def test_trace_timeline_matches_energy():
+    tr = PowerTrace()
+    tr.record("acc0", 0.0, 1.0, 100.0, "prefill")
+    tr.record("acc0", 1.0, 4.0, 20.0, "idle", state="idle")
+    times, watts = tr.timeline("acc0", n=400)
+    assert len(times) == 400 and all(w >= 0 for w in watts)
+    # midpoint-rule integral of the resampled curve ~ true joules
+    integral = sum(watts) * (4.0 / 400)
+    assert integral == pytest.approx(tr.energy_j("acc0"), rel=0.02)
+
+
+# ----------------------------------------------------------------------
+# governors: unit behavior on real engines
+# ----------------------------------------------------------------------
+def _loaded_prefill_engine(n_reqs, *, ttft_slo=None):
+    eng = Cluster("dis-ici", CFG).prefill_engines[0]
+    from repro.core.request import Request, SLO as ReqSLO
+    for i in range(n_reqs):
+        eng.submit(Request(req_id=i, prompt_len=4096, output_len=16,
+                           slo=ReqSLO(ttft_s=ttft_slo)))
+    return eng
+
+
+def test_static_governor_is_a_noop():
+    eng = _loaded_prefill_engine(2)
+    eng.phi = 0.74
+    g = StaticGovernor()
+    assert g.on_step(eng) == 0.74 and eng.phi == 0.74
+    assert g.decisions == []                 # no change, no record
+    g2 = StaticGovernor(phi=0.5)
+    assert g2.on_step(eng) == 0.5 and eng.phi == 0.5
+    assert len(g2.decisions) == 1
+
+
+def test_queue_depth_governor_scales_with_backlog():
+    g = QueueDepthGovernor(high_tokens=8192)
+    empty = _loaded_prefill_engine(0)
+    assert g.decide(empty)[0] == min(g.grid)       # coast when idle
+    full = _loaded_prefill_engine(4)               # 16k tokens queued
+    assert g.decide(full)[0] == max(g.grid)        # flat out
+    phis = [g.decide(_loaded_prefill_engine(n))[0] for n in range(4)]
+    assert phis == sorted(phis)                    # monotone in load
+
+
+def test_slo_slack_governor_tracks_ttft_slack():
+    g = SLOSlackGovernor()
+    # infinite slack -> grid floor
+    assert g.decide(_loaded_prefill_engine(2, ttft_slo=1e6))[0] \
+        == min(g.grid)
+    # impossible target -> pinned to max
+    eng = _loaded_prefill_engine(2, ttft_slo=1e-4)
+    phi, signal = g.decide(eng)
+    assert phi == max(g.grid) and "pinned" in signal
+    # tighter targets never pick a lower phi
+    phis = [g.decide(_loaded_prefill_engine(2, ttft_slo=t))[0]
+            for t in (1e6, 8.0, 2.0, 0.7, 1e-4)]
+    assert phis == sorted(phis)
+
+
+def test_governor_registry():
+    assert set(GOVERNORS) == {"static", "queue-depth", "slo-slack"}
+    with pytest.raises(ValueError):
+        make_governor("overclock-everything")
+    g = make_governor("slo-slack", safety=0.5)
+    assert isinstance(g, SLOSlackGovernor) and g.safety == 0.5
+    assert g.grid == tuple(sorted(DEFAULT_FREQ_GRID))
+
+
+# ----------------------------------------------------------------------
+# spec plumbing
+# ----------------------------------------------------------------------
+def test_spec_governor_broadcast_and_validation():
+    s = FleetSpec.disaggregated(2, 1, "ici", governor="queue-depth")
+    assert s.governors == ("queue-depth",) * 3
+    s2 = FleetSpec.disaggregated(
+        1, 1, "ici", governor=("slo-slack", "static"))
+    assert s2.governors == ("slo-slack", "static")
+    assert hash(s2) != hash(s)                    # stays hashable
+    with pytest.raises(ValueError):               # wrong arity
+        FleetSpec.colocated(2, governor=("static",))
+    with pytest.raises(ValueError):               # unknown name: engine
+        FleetCluster(FleetSpec.colocated(1, governor="warp-speed"), CFG)
+
+
+def test_cluster_governor_kwarg_overrides_spec():
+    cl = make_cluster("dis-ici", CFG, governor="slo-slack")
+    assert all(isinstance(e.governor, SLOSlackGovernor)
+               for e in cl.engines)
+    per = FleetCluster(FleetSpec.disaggregated(
+        1, 1, "ici", governor=("queue-depth", "static")), CFG)
+    assert isinstance(per.prefill_engines[0].governor, QueueDepthGovernor)
+    assert isinstance(per.decode_engines[0].governor, StaticGovernor)
+
+
+# ----------------------------------------------------------------------
+# min-energy router policy
+# ----------------------------------------------------------------------
+def test_min_energy_router_prefers_cheap_low_clock_instances():
+    assert "min-energy" in POLICIES
+    cost = CostModel(CFG)
+
+    class _E:
+        def __init__(self, phi, outstanding):
+            self.cost, self.phi, self.budget = cost, phi, 8192
+            self._o = outstanding
+
+        def outstanding_tokens(self):
+            return self._o
+
+    # equal queues: the downclocked instance's marginal token is cheaper
+    fast, slow = _E(1.0, 1000), _E(0.5, 1000)
+    assert Router([fast, slow], "min-energy", seed=0).pick() is slow
+    # equal phi: the shorter queue drains for fewer joules
+    busy, idle = _E(1.0, 50_000), _E(1.0, 10)
+    assert Router([busy, idle], "min-energy", seed=0).pick() is idle
+
+
+def test_min_energy_jpt_is_u_shaped_in_phi():
+    """The projection the router ranks on reproduces the DVFS U-curve:
+    the minimum-energy frequency is interior, not an endpoint."""
+    cost = CostModel(CFG)
+    jpt = [cost.joules_per_token(phi) for phi in DEFAULT_FREQ_GRID]
+    best = jpt.index(min(jpt))
+    assert 0 < best < len(jpt) - 1, jpt
+
+
+# ----------------------------------------------------------------------
+# parity: the default static governor is the offline sweep
+# ----------------------------------------------------------------------
+def test_static_governor_reproduces_sweep_frequencies_bit_identically():
+    wl = lambda: open_loop_workload(   # noqa: E731
+        6.0, 8, lengths=PaperFixedLengths(2048, 16), slo=SLO, seed=0)
+    sw = sweep_frequencies("dis-ici", CFG, wl, freq_grid=(0.58, 1.0))
+    for phi in (0.58, 1.0):
+        res = make_cluster("dis-ici", CFG, phi=phi).run(wl())
+        ref = sw.results[phi]
+        assert res.energy.total_j == ref.energy.total_j
+        assert res.metrics.median_ttft_s == ref.metrics.median_ttft_s
+        assert res.metrics.median_tpot_s == ref.metrics.median_tpot_s
+
+
+def test_adaptive_governor_beats_static_max_energy_on_dis():
+    """The headline positive result behind fig8 check (a): at a load
+    near the colocated knee, the SLO-slack governor on dis-ici keeps
+    attainment >= 0.9 while burning less energy than static phi=1.0."""
+    def run(**kw):
+        reqs = open_loop_workload(4.0, 16, slo=SLO, seed=0)
+        res = make_cluster("dis-ici", CFG, **kw).run(reqs)
+        return res.energy.total_j, evaluate(reqs, SLO).attainment
+
+    e_static, att_static = run(phi=1.0)
+    e_gov, att_gov = run(governor="slo-slack")
+    assert att_gov >= 0.9 and att_static >= 0.9
+    assert e_gov < e_static, (e_gov, e_static)
+
+
+def test_governor_decisions_are_recorded_and_deterministic():
+    def once():
+        reqs = open_loop_workload(6.0, 10, slo=SLO, seed=3)
+        cl = make_cluster("dis-ici", CFG, governor="slo-slack")
+        cl.run(reqs)
+        return [(d.t, d.engine, d.phi) for e in cl.engines
+                for d in e.governor.decisions]
+
+    a, b = once(), once()
+    assert a and a == b
+    assert all(phi in make_governor("slo-slack").grid for _, _, phi in a)
+
+
+# ----------------------------------------------------------------------
+# energy-accounting invariants (hypothesis when available)
+# ----------------------------------------------------------------------
+def _check_energy_invariants(spec, arrival, rate, seed):
+    reqs = open_loop_workload(rate, 6, arrival=arrival,
+                              lengths=PaperFixedLengths(768, 6),
+                              slo=SLO, seed=seed)
+    cl = FleetCluster(spec, CFG)
+    res = cl.run(reqs)
+    meter = res.energy
+    # stage attribution is a partition of the total
+    assert sum(meter.by_stage.values()) == \
+        pytest.approx(meter.total_j, rel=1e-9)
+    trace = meter.trace
+    t0 = min(r.arrival_s for r in reqs)
+    t1 = max(r.finish_s for r in reqs)
+    for e in cl.engines:
+        samples = trace.samples.get(e.name, [])
+        assert samples, f"{e.name} has no power samples"
+        assert all(s.watts >= 0 and s.seconds >= 0 for s in samples)
+        # the power-state timeline covers the whole run span
+        assert trace.covers(e.name, t0, t1, tol=1e-6), \
+            trace.gaps(e.name, t0, t1)
+        # trace busy time agrees with the engine's own busy clock
+        assert trace.busy_s(e.name) == pytest.approx(e.busy_s, rel=1e-9)
+        # trace-integrated accelerator joules agree with the meter
+        assert trace.energy_j(e.name) == \
+            pytest.approx(meter.joules[e.name], rel=1e-6)
+    for r in reqs:
+        assert r.done
+
+
+GOVS = sorted(GOVERNORS)
+
+
+@settings(max_examples=20, deadline=None)
+@given(colocated=st.booleans(),
+       x=st.integers(min_value=1, max_value=2),
+       y=st.integers(min_value=1, max_value=2),
+       medium_i=st.integers(min_value=0, max_value=2),
+       gov_i=st.integers(min_value=0, max_value=2),
+       arrival=st.sampled_from(["poisson", "gamma", "deterministic"]),
+       rate=st.sampled_from([4.0, 20.0]),
+       seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_energy_invariants_any_fleet_governor_seed(
+        colocated, x, y, medium_i, gov_i, arrival, rate, seed):
+    """For ANY fleet shape, governor, arrival process, and seed:
+    by_stage partitions total_j, power traces are non-negative and
+    cover the full run span, and trace integrals match the meter."""
+    gov = GOVS[gov_i]
+    if colocated:
+        spec = FleetSpec.colocated(1 + x % 2, governor=gov)
+    else:
+        spec = FleetSpec.disaggregated(
+            x, y, ("ici", "host", "disk")[medium_i], governor=gov)
+    _check_energy_invariants(spec, arrival, rate, seed)
+
+
+if not HAS_HYPOTHESIS:
+    def test_energy_invariants_fixed_examples():
+        for gov in GOVS:
+            _check_energy_invariants(
+                FleetSpec.disaggregated(2, 1, "host", governor=gov),
+                "gamma", 10.0, 11)
+            _check_energy_invariants(
+                FleetSpec.colocated(2, governor=gov), "poisson", 4.0, 3)
