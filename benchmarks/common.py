@@ -1,9 +1,12 @@
-"""Shared benchmark machinery: the paper's workload and setup sweep.
+"""Shared benchmark machinery over the ``repro.exp`` Experiment API.
 
 Experiment 1 (Figs 1-4): input 16,384 / output 256, batch swept 2..64,
-request rate infinite, five setups. One sweep is shared by all figures
-(module-level cache) so ``python -m benchmarks.run`` does each simulation
-once.
+request rate infinite, five setups. Every cell is a declarative
+``Experiment`` executed through ``repro.exp.run``, so results are
+memoized in the content-addressed cache under ``benchmarks/out/cache``
+— one simulation per unique spec, shared across figures, processes,
+and reruns (``python -m benchmarks.run`` twice simulates nothing the
+second time).
 """
 from __future__ import annotations
 
@@ -11,11 +14,12 @@ import csv
 import os
 from typing import Dict, Iterable, List, Tuple
 
-from repro.configs import get_config
-from repro.core import Cluster, SETUPS, SetupResult, random_workload
+from repro.core import SETUPS
+from repro.exp import Experiment, Grid, RunRecord, run, run_grid
 
-ARCH = os.environ.get("REPRO_BENCH_ARCH", "llama32-3b")
-BATCHES = (2, 4, 8, 16, 32, 48, 64)
+DEFAULT_ARCH = os.environ.get("REPRO_BENCH_ARCH", "llama32-3b")
+DEFAULT_BATCHES = (2, 4, 8, 16, 32, 48, 64)
+QUICK_BATCHES = (2, 8, 16, 32)          # the --quick / CI grid
 INPUT_LEN = 16_384
 OUTPUT_LEN = 256
 # open-loop mode (--rate): Poisson arrivals over the same paper shape
@@ -23,41 +27,55 @@ RATES = (1.0, 2.0, 4.0, 8.0, 16.0)
 OPEN_LOOP_N = 24
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 
-_CACHE: Dict[Tuple[str, str, int], SetupResult] = {}
-_RATE_CACHE: Dict[Tuple[str, str, float, int, int], SetupResult] = {}
+def closed_exp(setup, batch: int, arch: str = DEFAULT_ARCH,
+               **kw) -> Experiment:
+    """The paper's Experiment-1 cell as a spec: ``batch`` requests of
+    16,384/256 at t=0 on ``setup``. ``phi``/``phi_prefill``/
+    ``phi_decode``/``governor`` map onto the fleet; they are part of
+    the spec (hence the cache key), never an out-of-band override —
+    anything else is a typo (the old **kw pass-through silently
+    bypassed the cache and rebuilt the config twice)."""
+    from repro.exp.spec import apply_spec_knobs
+    exp = Experiment.closed(setup, batch, arch=arch,
+                            input_len=INPUT_LEN, output_len=OUTPUT_LEN)
+    exp, leftovers = apply_spec_knobs(exp, kw)
+    if leftovers:
+        raise TypeError(f"unknown experiment knobs: {sorted(leftovers)}")
+    return exp
 
 
-def run_point(setup: str, batch: int, arch: str = ARCH,
-              **kw) -> SetupResult:
-    key = (arch, setup, batch)
-    if key not in _CACHE and not kw:
-        cfg = get_config(arch)
-        reqs = random_workload(batch, input_len=INPUT_LEN,
-                               output_len=OUTPUT_LEN)
-        _CACHE[key] = Cluster(setup, cfg).run(reqs)
-    if kw:
-        cfg = get_config(arch)
-        reqs = random_workload(batch, input_len=INPUT_LEN,
-                               output_len=OUTPUT_LEN)
-        return Cluster(setup, cfg, **kw).run(reqs)
-    return _CACHE[key]
+def run_point(setup, batch: int, arch: str = DEFAULT_ARCH,
+              **kw) -> RunRecord:
+    return run(closed_exp(setup, batch, arch, **kw))
 
 
-def run_open_loop_point(setup: str, rate: float, arch: str = ARCH,
-                        n: int = OPEN_LOOP_N, seed: int = 0) -> SetupResult:
-    """One open-loop cell: Poisson arrivals at ``rate`` req/s over the
-    paper's fixed 16k/256 shape, scored against the shared interactive
-    SLO so goodput/attainment columns are meaningful (cached like
-    ``run_point``)."""
-    from repro.workload import DEFAULT_INTERACTIVE_SLO, open_loop_workload
-    key = (arch, setup, float(rate), n, seed)
-    if key not in _RATE_CACHE:
-        cfg = get_config(arch)
-        reqs = open_loop_workload(rate, n, seed=seed,
-                                  slo=DEFAULT_INTERACTIVE_SLO,
-                                  lengths=None)  # paper-fixed 16k/256
-        _RATE_CACHE[key] = Cluster(setup, cfg).run(reqs)
-    return _RATE_CACHE[key]
+def open_exp(setup, rate: float, arch: str = DEFAULT_ARCH,
+             n: int = OPEN_LOOP_N, seed: int = 0) -> Experiment:
+    """One open-loop cell spec: Poisson arrivals at ``rate`` req/s over
+    the paper's fixed 16k/256 shape, scored against the shared
+    interactive SLO so goodput/attainment columns are meaningful."""
+    from repro.workload import DEFAULT_INTERACTIVE_SLO
+    return Experiment.open(setup, rate, arch=arch, n=n, seed=seed,
+                           slo=DEFAULT_INTERACTIVE_SLO)
+
+
+def run_open_loop_point(setup, rate: float, arch: str = DEFAULT_ARCH,
+                        n: int = OPEN_LOOP_N, seed: int = 0) -> RunRecord:
+    return run(open_exp(setup, rate, arch, n=n, seed=seed))
+
+
+def full_sweep(arch: str = DEFAULT_ARCH,
+               batches: Iterable[int] = DEFAULT_BATCHES, *,
+               parallel: int = 1
+               ) -> Dict[Tuple[str, int], RunRecord]:
+    """The whole Experiment-1 matrix as one grid: cache misses fan out
+    over ``parallel`` processes; figures then hit the warm cache."""
+    batches = tuple(batches)
+    grid = Grid(closed_exp(SETUPS[0], batches[0], arch),
+                {"setup": SETUPS, "batch": batches})
+    recs = run_grid(grid, parallel=parallel)
+    cells = [(s, b) for s in SETUPS for b in batches]
+    return dict(zip(cells, recs))
 
 
 def open_loop_arg_parser(doc: str) -> "argparse.ArgumentParser":
@@ -65,18 +83,12 @@ def open_loop_arg_parser(doc: str) -> "argparse.ArgumentParser":
     figures (fig1/fig2/fig6) so new knobs land in one place."""
     import argparse
     ap = argparse.ArgumentParser(description=doc)
-    ap.add_argument("--arch", default=ARCH)
+    ap.add_argument("--arch", default=DEFAULT_ARCH)
     ap.add_argument("--rate", type=float, action="append", default=None,
                     help="open-loop offered rate (repeatable); omit for "
                          "the paper's batch sweep where applicable")
     ap.add_argument("--requests", type=int, default=OPEN_LOOP_N)
     return ap
-
-
-def full_sweep(arch: str = ARCH,
-               batches: Iterable[int] = BATCHES
-               ) -> Dict[Tuple[str, int], SetupResult]:
-    return {(s, b): run_point(s, b, arch) for s in SETUPS for b in batches}
 
 
 def write_json(payload: Dict, name: str, out: str = None) -> str:

@@ -3,7 +3,8 @@
 ``--rate`` switches the x-axis from batch size (the paper's infinite-
 rate RandomDataset) to offered load: Poisson arrivals at each requested
 rate over the same 16k/256 shape, reporting SLO-era open-loop metrics
-(queue delay, attainment-ready percentiles).
+(queue delay, attainment-ready percentiles). Every cell routes through
+``repro.exp.run``, so a repeated invocation is pure cache reads.
 
   python -m benchmarks.fig1_latency                  # batch sweep
   python -m benchmarks.fig1_latency --rate 2 --rate 8
@@ -14,13 +15,14 @@ from repro.core import SETUPS
 from . import common
 
 
-def run(arch: str = common.ARCH):
+def run(arch: str = common.DEFAULT_ARCH,
+        batches=common.DEFAULT_BATCHES):
     header = ["setup", "batch", "median_ttft_s", "p99_ttft_s",
               "median_tpot_ms", "p99_tpot_ms", "evictions",
               "recomputed_tokens"]
     rows = []
     for setup in SETUPS:
-        for bs in common.BATCHES:
+        for bs in batches:
             m = common.run_point(setup, bs, arch).metrics
             rows.append([setup, bs, round(m.median_ttft_s, 4),
                          round(m.p99_ttft_s, 4),
@@ -32,7 +34,8 @@ def run(arch: str = common.ARCH):
     return rows
 
 
-def run_rates(rates, arch: str = common.ARCH, n: int = common.OPEN_LOOP_N):
+def run_rates(rates, arch: str = common.DEFAULT_ARCH,
+              n: int = common.OPEN_LOOP_N):
     header = ["setup", "rate_rps", "median_ttft_s", "p99_ttft_s",
               "median_tpot_ms", "p99_tpot_ms", "median_queue_s",
               "evictions"]

@@ -3,7 +3,7 @@
 ``--rate`` switches to the open-loop axis: throughput plus goodput
 (requests/s meeting the shared interactive SLO — TTFT<=2s, TPOT<=7.5ms,
 ``repro.workload.DEFAULT_INTERACTIVE_SLO``) at each offered Poisson
-rate.
+rate. Cells are ``repro.exp`` experiments served from the result cache.
 
   python -m benchmarks.fig2_throughput
   python -m benchmarks.fig2_throughput --rate 2 --rate 8
@@ -14,12 +14,13 @@ from repro.core import SETUPS
 from . import common
 
 
-def run(arch: str = common.ARCH):
+def run(arch: str = common.DEFAULT_ARCH,
+        batches=common.DEFAULT_BATCHES):
     header = ["setup", "batch", "prefill_tput_tok_s", "decode_tput_tok_s",
               "makespan_s"]
     rows = []
     for setup in SETUPS:
-        for bs in common.BATCHES:
+        for bs in batches:
             m = common.run_point(setup, bs, arch).metrics
             rows.append([setup, bs,
                          round(m.prefill_throughput_tok_s, 1),
@@ -30,7 +31,8 @@ def run(arch: str = common.ARCH):
     return rows
 
 
-def run_rates(rates, arch: str = common.ARCH, n: int = common.OPEN_LOOP_N):
+def run_rates(rates, arch: str = common.DEFAULT_ARCH,
+              n: int = common.OPEN_LOOP_N):
     header = ["setup", "rate_rps", "offered_rps", "prefill_tput_tok_s",
               "decode_tput_tok_s", "goodput_rps", "makespan_s"]
     rows = []

@@ -5,14 +5,15 @@ from repro.core import SETUPS
 from . import common
 
 
-def run(arch: str = common.ARCH):
+def run(arch: str = common.DEFAULT_ARCH,
+        batches=common.DEFAULT_BATCHES):
     header = ["setup", "batch", "total_energy_kj", "joules_per_token"]
     rows = []
     for setup in SETUPS:
-        for bs in common.BATCHES:
-            res = common.run_point(setup, bs, arch)
-            rows.append([setup, bs, round(res.energy.total_j / 1e3, 3),
-                         round(res.joules_per_token, 5)])
+        for bs in batches:
+            rec = common.run_point(setup, bs, arch)
+            rows.append([setup, bs, round(rec.total_j / 1e3, 3),
+                         round(rec.joules_per_token, 5)])
     common.print_table("Fig 3: energy vs batch size", header, rows)
     common.write_csv("fig3_energy.csv", header, rows)
     return rows

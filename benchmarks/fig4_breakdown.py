@@ -8,13 +8,12 @@ from . import common
 COMPONENTS = ("acc0", "acc1", "cpu", "dram", "disk", "pcie", "ici")
 
 
-def run(arch: str = common.ARCH, batches=(4, 16, 64)):
+def run(arch: str = common.DEFAULT_ARCH, batches=(4, 16, 64)):
     header = ["setup", "batch"] + [f"{c}_kj" for c in COMPONENTS]
     rows = []
     for setup in SETUPS:
         for bs in batches:
-            res = common.run_point(setup, bs, arch)
-            bd = res.energy.breakdown()
+            bd = common.run_point(setup, bs, arch).energy_by_component
             rows.append([setup, bs] + [round(bd.get(c, 0.0) / 1e3, 3)
                                        for c in COMPONENTS])
     common.print_table("Fig 4: component energy breakdown", header, rows)

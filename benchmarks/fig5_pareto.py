@@ -2,9 +2,11 @@
 grid (batch 16, input 16,384, output 256), plus the stage-wise independent
 (phi_p, phi_d) search for the disaggregated setups.
 
-Transfer energy is attributed per leg (store -> prefill side, fetch ->
-decode side) from the routed path's actual LegCosts — see
-``repro.core.dvfs.sweep_frequencies``.
+The frequency axis is a ``repro.exp`` Grid over ``phi`` (and the
+independent search a grid over ``phi_prefill x phi_decode``): every
+point is one cached Experiment, so re-plots and CI reruns cost cache
+reads. Transfer energy is attributed per leg (store -> prefill side,
+fetch -> decode side) from the routed path's actual LegCosts.
 
   python -m benchmarks.fig5_pareto              # full grid, CSV
   python -m benchmarks.fig5_pareto --smoke      # CI: tiny grid + JSON
@@ -12,11 +14,12 @@ decode side) from the routed path's actual LegCosts — see
 """
 from __future__ import annotations
 
-from repro.configs import get_config
-from repro.core import SETUPS, random_workload
+from typing import List
+
+from repro.core import SETUPS
 from repro.core.costs import DEFAULT_FREQ_GRID
-from repro.core.dvfs import (best_independent, best_total_energy,
-                             sweep_frequencies, sweep_independent)
+from repro.core.energy import ParetoPoint, pareto_frontier
+from repro.exp import Grid, RunRecord, run_grid
 from . import common
 
 GRID = DEFAULT_FREQ_GRID[::2] + (1.0,)    # 6-point grid keeps runtime sane
@@ -28,21 +31,33 @@ HEADER2 = ["setup", "phi_prefill", "phi_decode", "ttft_s", "tpot_ms",
            "stage_energy_kj"]
 
 
-def run(arch: str = common.ARCH, *, smoke: bool = False, out: str = None):
-    cfg = get_config(arch)
+def _stage_points(setup: str, grid, recs: List[RunRecord]):
+    """(prefill, decode) ParetoPoint lists for one setup's phi sweep —
+    the exact shape ``dvfs.sweep_frequencies`` produced."""
+    prefill_pts = [ParetoPoint(phi=phi, latency_s=r.metrics.median_ttft_s,
+                               energy_j=r.prefill_side_j, label=setup)
+                   for phi, r in zip(grid, recs)]
+    decode_pts = [ParetoPoint(phi=phi, latency_s=r.metrics.median_tpot_s,
+                              energy_j=r.decode_side_j, label=setup)
+                  for phi, r in zip(grid, recs)]
+    return prefill_pts, decode_pts
+
+
+def run(arch: str = common.DEFAULT_ARCH, *, smoke: bool = False,
+        out: str = None, parallel: int = 1):
     grid = SMOKE_GRID if smoke else GRID
     batch = 8 if smoke else 16
+    base = common.closed_exp(SETUPS[0], batch, arch)
 
-    def _wl():
-        return random_workload(batch, input_len=common.INPUT_LEN,
-                               output_len=common.OUTPUT_LEN)
-
-    rows = []
-    sweeps = {}
-    for setup in SETUPS:
-        sw = sweep_frequencies(setup, cfg, _wl, freq_grid=grid)
-        sweeps[setup] = sw
-        for pp, dp in zip(sw.prefill_points, sw.decode_points):
+    # same-phi sweep: phi applied to every accelerator, as the paper does
+    recs = run_grid(Grid(base, {"setup": SETUPS, "phi": grid}),
+                    parallel=parallel)
+    rows, sweeps = [], {}
+    for i, setup in enumerate(SETUPS):
+        chunk = recs[i * len(grid):(i + 1) * len(grid)]
+        pp_pts, dp_pts = _stage_points(setup, grid, chunk)
+        sweeps[setup] = (pp_pts, dp_pts)
+        for pp, dp in zip(pp_pts, dp_pts):
             rows.append([setup, pp.phi, round(pp.latency_s, 4),
                          round(pp.energy_j / 1e3, 3),
                          round(dp.latency_s * 1e3, 3),
@@ -50,20 +65,32 @@ def run(arch: str = common.ARCH, *, smoke: bool = False, out: str = None):
     common.print_table("Fig 5: latency-energy Pareto points", HEADER, rows)
     common.write_csv("fig5_pareto.csv", HEADER, rows)
 
-    # stage-wise independent frequency search (disaggregation's edge)
+    # stage-wise independent frequency search (disaggregation's edge) —
+    # a phi_prefill x phi_decode grid per disaggregated setup
+    grid2 = grid if smoke else grid[::2] + (1.0,)
     rows2 = []
     for setup in SETUPS:
         if setup.startswith("co"):
-            best = best_total_energy(sweeps[setup])
+            pp_pts, dp_pts = sweeps[setup]
+            best = min(
+                ({"phi_prefill": pp.phi, "phi_decode": dp.phi,
+                  "ttft_s": pp.latency_s, "tpot_s": dp.latency_s,
+                  "energy_j": pp.energy_j + dp.energy_j}
+                 for pp, dp in zip(pp_pts, dp_pts)),
+                key=lambda b: b["energy_j"])
         else:
-            recs = sweep_independent(setup, cfg, _wl,
-                                     freq_grid=grid if smoke
-                                     else grid[::2] + (1.0,))
-            b = best_independent(recs)
-            best = {"phi_prefill": b["phi_prefill"],
-                    "phi_decode": b["phi_decode"],
-                    "ttft_s": b["ttft_s"], "tpot_s": b["tpot_s"],
-                    "energy_j": b["energy_j"]}
+            pair_recs = run_grid(
+                Grid(base.with_fleet(setup),
+                     {"phi_prefill": grid2, "phi_decode": grid2}),
+                parallel=parallel)
+            best = min(
+                ({"phi_prefill": pp, "phi_decode": pd,
+                  "ttft_s": r.metrics.median_ttft_s,
+                  "tpot_s": r.metrics.median_tpot_s,
+                  "energy_j": r.prefill_side_j + r.decode_side_j}
+                 for (pp, pd), r in zip(
+                     ((p, d) for p in grid2 for d in grid2), pair_recs)),
+                key=lambda b: b["energy_j"])
         rows2.append([setup, best["phi_prefill"], best["phi_decode"],
                       round(best["ttft_s"], 4),
                       round(best["tpot_s"] * 1e3, 3),
@@ -88,8 +115,8 @@ def run(arch: str = common.ARCH, *, smoke: bool = False, out: str = None):
         "points": [dict(zip(HEADER, r)) for r in rows],
         "best_frequency": [dict(zip(HEADER2, r)) for r in rows2],
         "frontiers": {
-            s: {"prefill": _points(sweeps[s].prefill_frontier()),
-                "decode": _points(sweeps[s].decode_frontier())}
+            s: {"prefill": _points(pareto_frontier(sweeps[s][0])),
+                "decode": _points(pareto_frontier(sweeps[s][1]))}
             for s in SETUPS},
         # paper takeaway 2, machine-checkable: independent (phi_p,
         # phi_d) scaling never undercuts the colocated best
@@ -106,13 +133,15 @@ def run(arch: str = common.ARCH, *, smoke: bool = False, out: str = None):
 def main(argv=None):
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", default=common.ARCH)
+    ap.add_argument("--arch", default=common.DEFAULT_ARCH)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny grid for CI; emits the same JSON artifact")
     ap.add_argument("--out", default=None,
                     help="JSON output path (default benchmarks/out/)")
+    ap.add_argument("--parallel", type=int, default=1,
+                    help="process-pool width for cache misses")
     args = ap.parse_args(argv)
-    run(args.arch, smoke=args.smoke, out=args.out)
+    run(args.arch, smoke=args.smoke, out=args.out, parallel=args.parallel)
     return 0
 
 

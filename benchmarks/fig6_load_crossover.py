@@ -26,7 +26,8 @@ DIS_SETUPS = ("dis-ici", "dis-host", "dis-disk")
 DEFAULT_SLO = DEFAULT_INTERACTIVE_SLO
 
 
-def run(arch: str = common.ARCH, *, rates=None, n: int = common.OPEN_LOOP_N,
+def run(arch: str = common.DEFAULT_ARCH, *, rates=None,
+        n: int = common.OPEN_LOOP_N,
         slo: SLO = DEFAULT_SLO, smoke: bool = False, seed: int = 0):
     cfg = get_config(arch)
     if rates is None:

@@ -29,7 +29,8 @@ RATIO_SHAPES = ((1, 3), (2, 2), (3, 1))
 CAPACITY_SHAPES = ((1, 1), (2, 2))
 
 
-def run(arch: str = common.ARCH, *, rates=None, n: int = common.OPEN_LOOP_N,
+def run(arch: str = common.DEFAULT_ARCH, *, rates=None,
+        n: int = common.OPEN_LOOP_N,
         slo: SLO = DEFAULT_SLO, smoke: bool = False, seed: int = 0):
     cfg = get_config(arch)
     media = ("ici",) if smoke else ("ici", "host", "disk")

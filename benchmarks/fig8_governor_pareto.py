@@ -27,10 +27,10 @@ Reproduced conclusions (asserted by CI on the smoke JSON):
 """
 from __future__ import annotations
 
-from repro.configs import get_config
-from repro.core import SLO, make_cluster
-from repro.workload import (DEFAULT_INTERACTIVE_SLO, evaluate,
-                            open_loop_workload)
+from repro.core import SLO
+from repro.exp import Experiment
+from repro.exp import run as run_exp
+from repro.workload import DEFAULT_INTERACTIVE_SLO
 
 from . import common
 
@@ -42,27 +42,27 @@ HEADER = ["setup", "rate_rps", "policy", "attainment", "goodput_rps",
           "total_j", "active_j", "idle_j", "j_per_token", "decisions"]
 
 
-def _cell(setup, cfg, rate, *, slo, n, seed, **cluster_kw):
-    """One (setup, rate, policy) run: metrics + the energy state split
-    the governor experiments are about."""
-    reqs = open_loop_workload(rate, n, slo=slo, seed=seed)
-    cl = make_cluster(setup, cfg, **cluster_kw)
-    res = cl.run(reqs)
-    rep = evaluate(reqs, slo)
-    idle_j = res.energy.by_stage.get("idle", 0.0)
-    decisions = sum(len(e.governor.decisions) for e in cl.engines
-                    if e.governor is not None)
+def _cell(setup, arch, rate, *, slo, n, seed, phi=None, governor=None):
+    """One (setup, rate, policy) cell through ``repro.exp``: metrics +
+    the energy state split the governor experiments are about."""
+    exp = Experiment.open(setup, rate, arch=arch, n=n, seed=seed, slo=slo)
+    if phi is not None:
+        exp = exp.with_phi(phi=phi)
+    if governor is not None:
+        exp = exp.with_governor(governor)
+    rec = run_exp(exp)
+    idle_j = rec.idle_j
     return {
         "setup": setup, "rate_rps": rate,
-        "attainment": round(rep.attainment, 4),
-        "goodput_rps": round(rep.goodput_rps, 4),
-        "total_j": round(res.energy.total_j, 2),
-        "active_j": round(res.energy.total_j - idle_j, 2),
+        "attainment": round(rec.attainment, 4),
+        "goodput_rps": round(rec.goodput_rps, 4),
+        "total_j": round(rec.total_j, 2),
+        "active_j": round(rec.total_j - idle_j, 2),
         "idle_j": round(idle_j, 2),
-        "j_per_token": round(res.joules_per_token, 4),
-        "decisions": decisions,
+        "j_per_token": round(rec.joules_per_token, 4),
+        "decisions": rec.governor_decisions,
         "by_stage": {k: round(v, 2)
-                     for k, v in sorted(res.energy.by_stage.items())},
+                     for k, v in sorted(rec.energy_by_stage.items())},
     }
 
 
@@ -78,10 +78,9 @@ def _frontier(static_pts):
     return front
 
 
-def run(arch: str = common.ARCH, *, rates=None, n: int = None,
+def run(arch: str = common.DEFAULT_ARCH, *, rates=None, n: int = None,
         slo: SLO = DEFAULT_SLO, smoke: bool = False, seed: int = 0,
         out: str = None):
-    cfg = get_config(arch)
     if rates is None:
         rates = (2.0, 3.0) if smoke else (1.0, 2.0, 3.0, 4.0, 6.0)
     if n is None:      # None = unset, so --smoke --requests 24 honors 24
@@ -95,12 +94,12 @@ def run(arch: str = common.ARCH, *, rates=None, n: int = None,
     for setup in setups:
         for rate in rates:
             for phi in phi_grid:
-                rec = _cell(setup, cfg, rate, slo=slo, n=n, seed=seed,
+                rec = _cell(setup, arch, rate, slo=slo, n=n, seed=seed,
                             phi=phi)
                 rec["policy"] = f"static-{phi}"
                 records.append(rec)
             for gov in GOVERNORS:
-                rec = _cell(setup, cfg, rate, slo=slo, n=n, seed=seed,
+                rec = _cell(setup, arch, rate, slo=slo, n=n, seed=seed,
                             governor=gov)
                 rec["policy"] = gov
                 records.append(rec)

@@ -3,53 +3,46 @@ RAG-style workload — every request shares an 8k-token document; prompts
 differ in their opening tokens, so plain prefix matching whiffs while PIC
 reuses the shared block (CacheBlend-style selective recompute).
 
+Each mode is one ``repro.exp`` Experiment: the displaced shared document
+is part of the ``ClosedLoop`` spec (``rag_doc_len``/``rag_doc_offset``)
+and the cache configuration a ``ReuseSpec`` — so all three cells are
+content-addressed and memoized like every other figure.
+
   PYTHONPATH=src python -m benchmarks.reuse_bench
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.configs import get_config
-from repro.core import Cluster, random_workload
-from repro.core.prefix_cache import PrefixCache
+from repro.exp import ClosedLoop, Experiment, ReuseSpec
+from repro.exp import run as run_exp
 from . import common
 
+VOCAB = 128_256
+SHARED = 8_192
 
-def _rag_workload(batch, input_len=16_384, shared=8_192, vocab=128_256,
-                  seed=0):
+
+def _exp(mode: str, batch: int, arch: str) -> Experiment:
     """Shared document in the MIDDLE of each prompt (openings differ)."""
-    rng = np.random.default_rng(seed)
-    doc = rng.integers(0, vocab, shared)
-    reqs = random_workload(batch, input_len=input_len, output_len=256,
-                           vocab_size=vocab, seed=seed)
-    for r in reqs:
-        r.prompt_tokens[1024:1024 + shared] = doc   # displaced content
-    return reqs
+    return Experiment(
+        arch=arch, fleet="co-2gpus",
+        workload=ClosedLoop(batch=batch, input_len=16_384, output_len=256,
+                            vocab_size=VOCAB, rag_doc_len=SHARED,
+                            rag_doc_offset=1024),
+        reuse=None if mode == "none" else ReuseSpec(
+            mode=mode, capacity_pages=200_000, page_size=16,
+            recompute_frac=0.15))
 
 
-def run(batch: int = 16):
-    cfg = get_config(common.ARCH)
+def run(batch: int = 16, arch: str = common.DEFAULT_ARCH):
     header = ["reuse", "median_ttft_s", "prefill_tput_tok_s",
               "reused_tokens", "joules_per_token"]
     rows = []
     for mode in ("none", "prefix", "pic"):
-        cache = None
-        reqs = _rag_workload(batch)
-        if mode != "none":
-            cache = PrefixCache(capacity_pages=200_000, page_size=16,
-                                pic=(mode == "pic"), recompute_frac=0.15)
-            # warm cache: a prior request already served the shared doc
-            cache.insert(reqs[0].prompt_tokens)
-        cluster = Cluster("co-2gpus", cfg)
-        if cache is not None:
-            for e in cluster.engines:
-                e.prefix_cache = cache
-        res = cluster.run(reqs)
-        m = res.metrics
-        reused = sum(r.reused_tokens for r in res.requests)
+        rec = run_exp(_exp(mode, batch, arch))
+        m = rec.metrics
         rows.append([mode, round(m.median_ttft_s, 3),
-                     round(m.prefill_throughput_tok_s, 0), reused,
-                     round(res.joules_per_token, 5)])
+                     round(m.prefill_throughput_tok_s, 0),
+                     m.total_reused_tokens,
+                     round(rec.joules_per_token, 5)])
     common.print_table(
         "KV reuse (RAG workload, shared 8k doc, displaced)", header, rows)
     common.write_csv("reuse_bench.csv", header, rows)

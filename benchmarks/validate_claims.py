@@ -1,11 +1,14 @@
 """Validate the reproduction against the paper's own claims (F1-F6,
 DESIGN.md section 1). Run as part of ``python -m benchmarks.run``; every
-check prints PASS/FAIL and the module exits nonzero on any FAIL."""
+check prints PASS/FAIL and the module exits nonzero on any FAIL.
+
+Every probe is a ``repro.exp`` cell served from the shared result
+cache, so claims re-validate for free after the figures have run.
+"""
 from __future__ import annotations
 
-from repro.configs import get_config
-from repro.core import SETUPS, random_workload
-from repro.core.dvfs import sweep_frequencies
+from repro.core import SETUPS
+from repro.exp import Grid, run_grid
 from . import common
 
 CHECKS = []
@@ -20,14 +23,14 @@ def check(name):
 
 @check("F1: co-2gpus achieves the best median TTFT while its KV pool "
        "capacity is not the binding constraint (batch <= 48)")
-def f1():
+def f1(batches):
     # At batch 64 (32 seqs/accelerator = 60 GB prompt KV vs the 28 GB
     # pool) the capacity ceiling binds: half the sequences physically
     # cannot hold KV until wave 1 drains, so colocated TTFT inverts
     # against the streaming disaggregated prefill engine. The paper's
     # broader claim ("benefits depend on request load") is exactly this
     # mechanism; the divergence at 64 is documented in EXPERIMENTS.md.
-    for bs in [b for b in common.BATCHES if b <= 48]:
+    for bs in [b for b in batches if b <= 48]:
         co2 = common.run_point("co-2gpus", bs).metrics.median_ttft_s
         for s in SETUPS:
             if s == "co-2gpus":
@@ -39,7 +42,7 @@ def f1():
 
 @check("F2: colocated TPOT cliffs at batch>=32 (eviction+recompute); "
        "disaggregated does not")
-def f2():
+def f2(batches):
     lo = common.run_point("co-2gpus", 16).metrics
     hi = common.run_point("co-2gpus", 32).metrics
     assert hi.median_tpot_s > 1.8 * lo.median_tpot_s, "no co-2gpus cliff"
@@ -52,7 +55,7 @@ def f2():
 
 @check("F3: transfer-path order gpu(ici) < cpu(host) < disk in TTFT "
        "and energy/token")
-def f3():
+def f3(batches):
     for bs in (8, 16, 64):
         t = {s: common.run_point(s, bs).metrics.median_ttft_s
              for s in ("dis-ici", "dis-host", "dis-disk")}
@@ -64,7 +67,7 @@ def f3():
 
 @check("F4: disaggregated throughput saturates with batch; co-2gpus "
        "drops around 32")
-def f4():
+def f4(batches):
     d16 = common.run_point("dis-ici", 16).metrics.decode_throughput_tok_s
     d64 = common.run_point("dis-ici", 64).metrics.decode_throughput_tok_s
     assert d64 >= d16 * 0.95, "dis throughput regressed with batch"
@@ -76,7 +79,7 @@ def f4():
 
 @check("F5: energy/token amortizes with batch, then co-2gpus spikes at "
        ">=32")
-def f5():
+def f5(batches):
     e = {bs: common.run_point("co-2gpus", bs).joules_per_token
          for bs in (2, 16, 32)}
     assert e[16] < e[2], "no static-power amortization"
@@ -88,31 +91,34 @@ def f5():
 
 @check("F6: latency-energy frontiers are U-curves; no disaggregated "
        "(phi_p, phi_d) beats colocated total energy")
-def f6():
-    cfg = get_config(common.ARCH)
+def f6(batches):
     grid = (0.26, 0.42, 0.58, 0.74, 0.90, 1.0)
-    wl = lambda: random_workload(16, input_len=common.INPUT_LEN,
-                                 output_len=common.OUTPUT_LEN)
-    co = sweep_frequencies("co-2gpus", cfg, wl, freq_grid=grid)
-    e_curve = [p.energy_j + d.energy_j
-               for p, d in zip(co.prefill_points, co.decode_points)]
+
+    def stage_energies(setup):
+        """Per-phi (prefill-side, decode-side) active energy — the same
+        per-leg attribution rule fig5 plots (RunRecord properties)."""
+        recs = run_grid(Grid(common.closed_exp(setup, 16), {"phi": grid}))
+        return ([r.prefill_side_j for r in recs],
+                [r.decode_side_j for r in recs])
+
+    co_pre, co_dec = stage_energies("co-2gpus")
+    e_curve = [p + d for p, d in zip(co_pre, co_dec)]
     best = e_curve.index(min(e_curve))
     assert 0 < best < len(e_curve) - 1, f"colocated curve not U: {e_curve}"
     co_best = min(e_curve)
     for setup in ("dis-ici", "dis-host", "dis-disk"):
-        dis = sweep_frequencies(setup, cfg, wl, freq_grid=grid)
-        dis_best = (min(p.energy_j for p in dis.prefill_points)
-                    + min(d.energy_j for d in dis.decode_points))
+        pre, dec = stage_energies(setup)
+        dis_best = min(pre) + min(dec)
         assert dis_best > co_best, \
             f"{setup} beat colocated energy ({dis_best} < {co_best})"
 
 
-def run():
+def run(batches=common.DEFAULT_BATCHES):
     print("\n== validate_claims: paper findings F1-F6")
     failures = 0
     for name, fn in CHECKS:
         try:
-            fn()
+            fn(batches)
             print(f"  PASS {name}")
         except AssertionError as e:
             failures += 1

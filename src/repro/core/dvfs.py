@@ -50,6 +50,31 @@ def _materialize(workload) -> List[Request]:
     return workload()
 
 
+def _route_exp(setup: Setup, cfg, workload, cluster_kw):
+    """The sweep cell as a ``repro.exp`` Experiment base (phi applied
+    per grid point by the caller) when it is spec-expressible: a
+    registered config, no out-of-band cluster kwargs, and a declarative
+    workload (``WorkloadSpec`` / ``ClosedLoop`` / ``OpenLoop``). A
+    factory callable cannot be content-addressed -> None (direct,
+    uncached simulation, the original behavior)."""
+    if cluster_kw:
+        return None
+    from repro.exp.spec import (ClosedLoop, Experiment, OpenLoop,
+                                as_cacheable, registered_arch)
+    from repro.workload.spec import WorkloadSpec
+    arch = registered_arch(cfg)
+    if arch is None:
+        return None
+    if isinstance(workload, WorkloadSpec):
+        exp = Experiment(arch=arch, fleet=setup, workload=workload,
+                         slo=workload.slo)
+    elif isinstance(workload, (ClosedLoop, OpenLoop)):
+        exp = Experiment(arch=arch, fleet=setup, workload=workload)
+    else:
+        return None
+    return as_cacheable(exp)
+
+
 def sweep_frequencies(setup: Setup, cfg: ModelConfig,
                       workload: Callable[[], List[Request]],
                       freq_grid: Tuple[float, ...] = DEFAULT_FREQ_GRID,
@@ -57,29 +82,39 @@ def sweep_frequencies(setup: Setup, cfg: ModelConfig,
     """Run the fixed workload at each grid frequency (set on ALL
     accelerators, as the paper does) and collect per-stage points.
     ``setup`` is a legacy setup name or any ``FleetSpec``; ``workload``
-    is a request-list factory or a ``WorkloadSpec``."""
+    is a request-list factory or a ``WorkloadSpec``.
+
+    This is the legacy sweep signature, kept as a shim over
+    ``repro.exp``: a spec-expressible call routes each grid point
+    through the content-addressed result cache (``results`` values are
+    then ``RunRecord``s — same ``.metrics`` / ``.energy`` surface);
+    factory workloads and custom configs simulate directly as before."""
     label = setup_label(setup)
+    base = _route_exp(setup, cfg, workload, cluster_kw)
+    # function-local imports keep the core <-> exp import direction
+    # acyclic at module load; hoisted above the loop
+    from repro.exp import run as _run_exp
+    from repro.exp.record import decode_side_j, prefill_side_j
+    from repro.exp.runner import count_uncached_sim
     prefill_pts, decode_pts, results = [], [], {}
     for phi in freq_grid:
-        res = make_cluster(setup, cfg, phi=phi, **cluster_kw).run(
-            _materialize(workload))
-        e_prefill = res.energy.by_stage.get("prefill", 0.0)
-        e_decode = res.energy.by_stage.get("decode", 0.0)
+        if base is not None:
+            res = _run_exp(base.with_phi(phi=phi))
+        else:
+            count_uncached_sim()
+            res = make_cluster(setup, cfg, phi=phi, **cluster_kw).run(
+                _materialize(workload))
         # each handoff leg is attributed to the stage that runs it,
         # using the routed TransferPath's actual LegCosts (tagged at the
         # call sites): the STORE leg is driven by the prefill side, the
-        # FETCH leg occupies the decode engine at admission. The old
-        # 50/50 split was arbitrary and visibly wrong for asymmetric
-        # media — ici stores device-to-device and fetches for free, disk
-        # pays different write/read bandwidths per leg.
-        e_store = res.energy.by_stage.get("transfer-store", 0.0)
-        e_fetch = res.energy.by_stage.get("transfer-fetch", 0.0)
+        # FETCH leg occupies the decode engine at admission. One rule,
+        # shared with fig5 and the F6 claim check (repro.exp.record).
         prefill_pts.append(ParetoPoint(
             phi=phi, latency_s=res.metrics.median_ttft_s,
-            energy_j=e_prefill + e_store, label=label))
+            energy_j=prefill_side_j(res.energy.by_stage), label=label))
         decode_pts.append(ParetoPoint(
             phi=phi, latency_s=res.metrics.median_tpot_s,
-            energy_j=e_decode + e_fetch, label=label))
+            energy_j=decode_side_j(res.energy.by_stage), label=label))
         results[phi] = res
     return FrequencySweep(setup=label, prefill_points=prefill_pts,
                           decode_points=decode_pts, results=results)
@@ -97,22 +132,27 @@ def sweep_independent(setup: Setup, cfg: ModelConfig,
     disaggregated fleet shape: the pair sets every instance of a stage."""
     assert as_fleet_spec(setup).is_disaggregated, \
         "independent scaling needs separate prefill/decode engines"
+    base = _route_exp(setup, cfg, workload, cluster_kw)
+    from repro.exp import run as _run_exp
+    from repro.exp.record import decode_side_j, prefill_side_j
+    from repro.exp.runner import count_uncached_sim
     records = []
     for phi_p in freq_grid:
         for phi_d in freq_grid:
-            res = make_cluster(setup, cfg, phi_prefill=phi_p,
-                               phi_decode=phi_d,
-                               **cluster_kw).run(_materialize(workload))
+            if base is not None:
+                res = _run_exp(base.with_phi(phi_prefill=phi_p,
+                                             phi_decode=phi_d))
+            else:
+                count_uncached_sim()
+                res = make_cluster(setup, cfg, phi_prefill=phi_p,
+                                   phi_decode=phi_d,
+                                   **cluster_kw).run(_materialize(workload))
             records.append({
                 "phi_prefill": phi_p, "phi_decode": phi_d,
                 "ttft_s": res.metrics.median_ttft_s,
                 "tpot_s": res.metrics.median_tpot_s,
-                "energy_j": (res.energy.by_stage.get("prefill", 0.0)
-                             + res.energy.by_stage.get("decode", 0.0)
-                             + res.energy.by_stage.get("transfer-store",
-                                                       0.0)
-                             + res.energy.by_stage.get("transfer-fetch",
-                                                       0.0)),
+                "energy_j": (prefill_side_j(res.energy.by_stage)
+                             + decode_side_j(res.energy.by_stage)),
                 "total_energy_j": res.energy.total_j,
             })
     return records

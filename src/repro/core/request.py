@@ -154,6 +154,8 @@ class WorkloadMetrics:
     makespan_s: float
     total_evictions: int
     total_recomputed_tokens: int
+    # prefill tokens skipped via KV-reuse cache hits (section II-C)
+    total_reused_tokens: int = 0
     # open-loop / goodput view (DESIGN.md section 9)
     num_requests: int = 0
     offered_rps: float = float("inf")   # observed arrival rate; inf at t=0
@@ -187,6 +189,7 @@ def summarize(reqs: List[Request]) -> WorkloadMetrics:
         makespan_s=float(makespan),
         total_evictions=sum(r.evictions for r in reqs),
         total_recomputed_tokens=sum(r.recomputed_tokens for r in reqs),
+        total_reused_tokens=sum(r.reused_tokens for r in reqs),
         num_requests=len(reqs),
         offered_rps=offered,
         median_queue_s=float(np.median(queues)) if queues.size else 0.0,

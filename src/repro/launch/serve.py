@@ -1,10 +1,13 @@
 """Serving launcher: run the paper's setups on any zoo architecture.
 
 Two modes:
-  * simulation (default): TPU-target timing/energy via the roofline cost
-    model — the paper's benchmarking mode, any arch, any batch size.
+  * simulation (default): one declarative ``repro.exp`` Experiment —
+    TPU-target timing/energy via the roofline cost model, memoized in
+    the content-addressed result cache like every figure cell.
   * --real: reduced config executed on CPU with real KV transfers between
-    engines (correctness mode; token streams are printed/compared).
+    engines (correctness mode; token streams are printed/compared). Real
+    runs use an off-registry reduced config and live executors, so they
+    simulate directly and are never cached.
 
 ``--setup`` takes a legacy setup name or any fleet shape ("2P2D-ici",
 "co-3"; see repro.fleet.FleetSpec.parse).
@@ -21,6 +24,8 @@ import jax
 
 from repro.configs import get_config, reduce_for_smoke
 from repro.core import RealExecutor, SETUPS, make_cluster, random_workload
+from repro.exp import Experiment
+from repro.exp import run as run_exp
 from repro.fleet import FleetSpec
 from repro.models import get_model
 
@@ -29,10 +34,8 @@ def serve(arch: str, setup: str, *, batch_size: int = 16,
           input_len: int = 16_384, output_len: int = 256,
           phi: float = 1.0, governor: str = None, real: bool = False,
           seed: int = 0, verbose: bool = True):
-    cfg = get_config(arch)
-    executor_factory = None
     if real:
-        cfg = reduce_for_smoke(cfg)
+        cfg = reduce_for_smoke(get_config(arch))
         input_len = min(input_len, 64)
         output_len = min(output_len, 8)
         model = get_model(cfg)
@@ -41,13 +44,21 @@ def serve(arch: str, setup: str, *, batch_size: int = 16,
         def executor_factory(path):
             return RealExecutor(model, params, transfer_path=path)
 
-    reqs = random_workload(batch_size, input_len=input_len,
-                           output_len=output_len,
-                           vocab_size=cfg.vocab_size if real else 0,
-                           seed=seed)
-    kw = {"governor": governor} if governor else {}
-    res = make_cluster(setup, cfg, phi=phi,
-                       executor_factory=executor_factory, **kw).run(reqs)
+        reqs = random_workload(batch_size, input_len=input_len,
+                               output_len=output_len,
+                               vocab_size=cfg.vocab_size, seed=seed)
+        kw = {"governor": governor} if governor else {}
+        res = make_cluster(setup, cfg, phi=phi,
+                           executor_factory=executor_factory,
+                           **kw).run(reqs)
+    else:
+        exp = Experiment.closed(setup, batch_size, arch=arch,
+                                input_len=input_len,
+                                output_len=output_len,
+                                seed=seed).with_phi(phi=phi)
+        if governor:
+            exp = exp.with_governor(governor)
+        res = run_exp(exp)
     if verbose:
         m = res.metrics
         gov = f" governor={governor}" if governor else ""

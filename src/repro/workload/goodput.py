@@ -48,21 +48,21 @@ def evaluate(reqs: Sequence[Request],
 RunAtRate = Callable[[float], List[Request]]
 
 
-def _default_runner(setup, cfg, *, lengths=None, n=24, seed=0,
-                    arrival: str = "poisson",
-                    slo: Optional[SLO] = None, **cluster_kw) -> RunAtRate:
-    """rate -> finished request list on a fresh cluster of ``setup`` (a
-    legacy setup name or any ``FleetSpec`` shape)."""
-    from repro.core.orchestrator import make_cluster
-    from .spec import open_loop_workload
+def _default_attains(setup, cfg, slo: Optional[SLO],
+                     target_attainment: float, **runner_kw):
+    """rate -> does ``setup`` attain the SLO target at that rate?
 
-    def run(rate: float) -> List[Request]:
-        reqs = open_loop_workload(rate, n, lengths=lengths, slo=slo,
-                                  arrival=arrival, seed=seed)
-        make_cluster(setup, cfg, **cluster_kw).run(reqs)
-        return reqs
+    Each probe is one ``run_rate_point`` cell — i.e. a ``repro.exp``
+    experiment served from the content-addressed cache whenever the
+    cell is spec-expressible — so repeated bisections (fig7's capacity
+    search, CI reruns) re-simulate nothing."""
+    from .sweep import run_rate_point
 
-    return run
+    def attains(rate: float) -> bool:
+        pt = run_rate_point(setup, cfg, rate, slo=slo, **runner_kw)
+        return pt.attainment >= target_attainment
+
+    return attains
 
 
 def max_goodput_rate(setup: Union[str, "FleetSpec", RunAtRate],  # noqa: F821
@@ -88,12 +88,13 @@ def max_goodput_rate(setup: Union[str, "FleetSpec", RunAtRate],  # noqa: F821
                 f"callable's own business: got cfg={cfg!r}, "
                 f"kwargs={sorted(runner_kw)}")
         run = setup
-    else:
-        run = _default_runner(setup, cfg, slo=slo, **runner_kw)
 
-    def attains(rate: float) -> bool:
-        reqs = run(rate)
-        return evaluate(reqs, slo).attainment >= target_attainment
+        def attains(rate: float) -> bool:
+            reqs = run(rate)
+            return evaluate(reqs, slo).attainment >= target_attainment
+    else:
+        attains = _default_attains(setup, cfg, slo, target_attainment,
+                                   **runner_kw)
 
     if not attains(lo):
         return 0.0

@@ -63,13 +63,59 @@ class RatePoint:
                   "total_j", "idle_j"]
 
 
+def _as_experiment(setup: Setup, cfg, rate: float, *, lengths, slo, n,
+                   seed, arrival, cluster_kw):
+    """The cell as a cacheable ``repro.exp`` spec, or None when it
+    cannot be content-addressed (an off-registry / modified config,
+    cluster kwargs with no spec equivalent, or unregistered workload
+    pieces) and must simulate directly. The gating rules live in
+    ``repro.exp.spec`` — shared with the DVFS shims."""
+    from repro.exp.spec import (Experiment, apply_spec_knobs,
+                                as_cacheable, registered_arch)
+    arch = registered_arch(cfg)
+    if arch is None:
+        return None
+    exp = Experiment.open(setup, rate, arch=arch, n=n, arrival=arrival,
+                          lengths=lengths, seed=seed, slo=slo)
+    exp, leftovers = apply_spec_knobs(exp, cluster_kw)
+    if leftovers:
+        return None
+    return as_cacheable(exp)
+
+
 def run_rate_point(setup: Setup, cfg, rate: float, *,
                    lengths: Optional[LengthMix] = None,
                    slo: Optional[SLO] = None, n: int = 24, seed: int = 0,
                    arrival: str = "poisson",
                    **cluster_kw) -> RatePoint:
-    """One grid cell: a fresh cluster (legacy setup or fleet shape)
-    serving an open-loop workload."""
+    """One grid cell: an open-loop workload served on ``setup``.
+
+    Routed through ``repro.exp.run`` whenever the cell is expressible
+    as a spec — which is every benchmark call — so rate grids,
+    crossover bisections, and capacity searches share one
+    content-addressed cache across processes. Off-registry configs and
+    exotic cluster kwargs fall back to a direct (uncached) simulation."""
+    exp = _as_experiment(setup, cfg, rate, lengths=lengths, slo=slo, n=n,
+                         seed=seed, arrival=arrival, cluster_kw=cluster_kw)
+    if exp is not None:
+        from repro.exp import run as run_exp
+        rec = run_exp(exp)
+        m = rec.metrics
+        g = rec.goodput
+        return RatePoint(setup=rec.setup, rate=rate,
+                         attainment=g["attainment"],
+                         goodput_rps=g["goodput_rps"],
+                         offered_rps=g["offered_rps"],
+                         median_ttft_s=m.median_ttft_s,
+                         p99_ttft_s=m.p99_ttft_s,
+                         median_tpot_s=m.median_tpot_s,
+                         makespan_s=m.makespan_s,
+                         joules_per_token=rec.joules_per_token,
+                         total_evictions=m.total_evictions,
+                         total_j=rec.total_j,
+                         idle_j=rec.idle_j)
+    from repro.exp.runner import count_uncached_sim
+    count_uncached_sim()
     reqs = open_loop_workload(rate, n, lengths=lengths, slo=slo,
                               arrival=arrival, seed=seed)
     res: SetupResult = make_cluster(setup, cfg, **cluster_kw).run(reqs)

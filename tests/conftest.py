@@ -11,6 +11,19 @@ def rng():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture(autouse=True, scope="session")
+def _isolated_exp_cache(tmp_path_factory):
+    """Point the repro.exp result cache at a session tmpdir: tests must
+    never read stale records from (or write into) the developer's
+    benchmarks/out/cache — a cost-model change would otherwise make
+    cached sweeps disagree with fresh simulations mid-suite."""
+    from repro.exp import ResultCache, set_default_cache
+    set_default_cache(
+        ResultCache(str(tmp_path_factory.mktemp("exp-cache"))))
+    yield
+    set_default_cache(None)
+
+
 @pytest.fixture(autouse=True, scope="module")
 def _clear_jax_caches_between_modules():
     """The full suite jits hundreds of programs; on the 35 GB container the

@@ -1,0 +1,358 @@
+"""repro.exp: spec hashing / JSON round-trips, Grid expansion, cache
+semantics (hit / miss / schema-bump invalidation / simulate-once), and
+the figure-parity goldens locking the ported fig5/fig6/fig8 smoke
+payloads to the pre-port outputs, value for value."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import SLO
+from repro.exp import (ClosedLoop, Experiment, Grid, OpenLoop, ResultCache,
+                       ReuseSpec, SCHEMA_VERSION, run, run_grid,
+                       set_default_cache)
+from repro.exp.runner import sim_count
+from repro.fleet import FleetSpec
+from repro.workload import (GammaArrivals, MixtureLengths,
+                            PaperFixedLengths, ShareGPTLengths)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+GOLDENS = os.path.join(os.path.dirname(__file__), "goldens")
+
+
+@pytest.fixture
+def tmp_cache(tmp_path):
+    """A per-test default cache (the session fixture already isolates
+    the suite from the repo cache; this one gives a test its own empty
+    cache and clean stats)."""
+    from repro.exp import runner
+    prev = runner._DEFAULT_CACHE
+    cache = ResultCache(str(tmp_path / "cache"))
+    set_default_cache(cache)
+    yield cache
+    set_default_cache(prev)
+
+
+def _tiny_exp(**kw):
+    return Experiment.closed("dis-ici", 2, input_len=512, output_len=4,
+                             **kw)
+
+
+# ----------------------------------------------------------------------
+# spec round-trips and content addressing
+# ----------------------------------------------------------------------
+EXAMPLES = [
+    Experiment.closed("dis-ici", 16),
+    Experiment.closed("co-2gpus", 8, seed=3,
+                      slo=SLO(ttft_s=1.0, tpot_s=0.01)),
+    Experiment.open("dis-host", 4.0, n=12, seed=7,
+                    slo=SLO(ttft_s=2.0, tpot_s=0.0075)),
+    Experiment.open("2P2D-ici", 8.0, arrival="gamma",
+                    arrival_kw={"cv": 3.0},
+                    lengths=ShareGPTLengths(prompt_sigma=1.5)),
+    Experiment.open("co-3", 6.0, arrival="ramp", n=32),
+    Experiment(arch="llama32-3b",
+               fleet=FleetSpec.disaggregated(2, 1, "disk",
+                                             phi_prefill=(1.0, 0.58),
+                                             governor=("static",
+                                                       "queue-depth",
+                                                       "slo-slack")),
+               workload=OpenLoop(
+                   arrivals=GammaArrivals(rate=5.0, cv=2.0),
+                   lengths=MixtureLengths(components=(
+                       (0.7, PaperFixedLengths(1024, 16)),
+                       (0.3, ShareGPTLengths()))),
+                   n=9, seed=2)),
+    Experiment(arch="llama32-3b", fleet="co-2gpus",
+               workload=ClosedLoop(batch=4, input_len=8192,
+                                   vocab_size=1000, rag_doc_len=2048),
+               reuse=ReuseSpec(mode="pic", recompute_frac=0.2)),
+]
+
+
+@pytest.mark.parametrize("i", range(len(EXAMPLES)))
+def test_json_roundtrip_is_exact(i):
+    e = EXAMPLES[i]
+    e2 = Experiment.from_json(e.to_json())
+    assert e2 == e
+    assert e2.spec_hash() == e.spec_hash()
+    assert e2.to_json() == e.to_json()
+
+
+def test_legacy_setup_label_is_preserved():
+    e = Experiment.closed("dis-ici", 4)
+    assert e.setup == "dis-ici"
+    assert e.fleet == FleetSpec.disaggregated(1, 1, "ici")
+    assert Experiment.from_json(e.to_json()).setup == "dis-ici"
+    # an explicit fleet shape labels as its canonical name
+    assert Experiment.closed("2P2D-ici", 4).setup == "2P2D-ici"
+    assert Experiment.closed(FleetSpec.colocated(3), 4).setup == "co-3"
+
+
+def test_same_content_same_hash_different_content_different_hash():
+    a, b = Experiment.closed("dis-ici", 16), Experiment.closed("dis-ici", 16)
+    assert a == b and hash(a) == hash(b)
+    assert a.spec_hash() == b.spec_hash()
+    assert len({e.spec_hash() for e in EXAMPLES}) == len(EXAMPLES)
+    # knob helpers change the address
+    assert a.with_phi(phi=0.58).spec_hash() != a.spec_hash()
+    assert a.with_governor("slo-slack").spec_hash() != a.spec_hash()
+
+
+def test_spec_hash_stable_across_process_restarts():
+    """The cache key must not depend on interpreter state (PYTHONHASHSEED,
+    import order): a fresh process derives the identical address."""
+    e = EXAMPLES[3]
+    code = ("import sys; sys.path.insert(0, {src!r})\n"
+            "from repro.exp import Experiment\n"
+            "print(Experiment.from_json({j!r}).spec_hash())"
+            .format(src=SRC, j=e.to_json()))
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, check=True,
+                         env={**os.environ, "PYTHONHASHSEED": "12345"})
+    assert out.stdout.strip() == e.spec_hash()
+
+
+def test_workload_spec_converts_and_slo_is_experiment_level():
+    from repro.workload import WorkloadSpec
+    ws = WorkloadSpec(arrivals=GammaArrivals(rate=2.0, cv=1.5),
+                      lengths=PaperFixedLengths(1024, 8), n=5, seed=1,
+                      slo=SLO(ttft_s=1.0))
+    e = Experiment(arch="llama32-3b", fleet="dis-ici", workload=ws)
+    assert isinstance(e.workload, OpenLoop)
+    assert e.workload.n == 5 and e.slo is None   # spec's slo is dropped
+
+
+def test_closed_loop_rag_builder_matches_legacy_reuse_workload():
+    """The spec-described RAG workload reproduces the historical inline
+    builder: doc drawn first from the seed, then spliced at the offset."""
+    import numpy as np
+    from repro.core import random_workload
+    wl = ClosedLoop(batch=3, input_len=4096, output_len=8,
+                    vocab_size=1000, rag_doc_len=512, rag_doc_offset=128,
+                    seed=5)
+    reqs = wl.build()
+    rng = np.random.default_rng(5)
+    doc = rng.integers(0, 1000, 512)
+    legacy = random_workload(3, input_len=4096, output_len=8,
+                             vocab_size=1000, seed=5)
+    for r in legacy:
+        r.prompt_tokens[128:128 + 512] = doc
+    for a, b in zip(reqs, legacy):
+        assert (a.prompt_tokens == b.prompt_tokens).all()
+
+
+# ----------------------------------------------------------------------
+# Grid
+# ----------------------------------------------------------------------
+def test_grid_expands_cartesian_in_axis_order():
+    g = Grid(_tiny_exp(), {"setup": ("co-1gpu", "dis-ici"),
+                           "batch": (2, 4, 8)})
+    exps = g.expand()
+    assert len(g) == len(exps) == 6
+    assert [(e.setup, e.workload.batch) for e in exps] == [
+        ("co-1gpu", 2), ("co-1gpu", 4), ("co-1gpu", 8),
+        ("dis-ici", 2), ("dis-ici", 4), ("dis-ici", 8)]
+
+
+def test_grid_axes_cover_phi_governor_rate_and_dotted_paths():
+    base = Experiment.open("dis-ici", 2.0, n=4)
+    exps = Grid(base, {"phi": (0.58, 1.0), "governor": ("static",
+                                                        "slo-slack"),
+                       "rate": (2.0, 8.0)}).expand()
+    assert len(exps) == 8
+    assert exps[0].fleet.phi_prefill == 0.58
+    assert exps[-1].fleet.governor == "slo-slack"
+    assert exps[-1].workload.rate == 8.0
+    # dotted dataclass path for knobs without a named axis
+    e = Grid(_tiny_exp(), {"workload.input_len": (64,)}).expand()[0]
+    assert e.workload.input_len == 64
+    with pytest.raises(KeyError):
+        Grid(_tiny_exp(), {"wat": (1,)}).expand()
+    with pytest.raises(ValueError):
+        Grid(_tiny_exp(), {"batch": ()})
+
+
+def test_grid_roundtrips_through_json():
+    for e in Grid(_tiny_exp(), {"setup": ("co-2gpus", "dis-disk"),
+                                "phi": (0.42, 1.0)}).expand():
+        assert Experiment.from_json(e.to_json()) == e
+
+
+# ----------------------------------------------------------------------
+# cache semantics
+# ----------------------------------------------------------------------
+def test_cache_hit_returns_value_identical_record(tmp_cache):
+    e = _tiny_exp()
+    s0 = sim_count()
+    rec1 = run(e)
+    rec2 = run(e)
+    assert sim_count() - s0 == 1            # second call was a hit
+    assert tmp_cache.stats.hits == 1 and tmp_cache.stats.misses == 1
+    assert rec2.to_dict() == rec1.to_dict()  # exact, incl. float bits
+    assert rec2.metrics.median_ttft_s == rec1.metrics.median_ttft_s
+    assert rec2.total_j == rec1.total_j
+
+
+def test_schema_version_bump_invalidates(tmp_cache, monkeypatch):
+    """A SCHEMA_VERSION bump (records gain new semantics) must miss on
+    every cell of the old generation and repopulate a fresh one."""
+    e = _tiny_exp()
+    old = run(e)
+    assert old.schema_version == SCHEMA_VERSION
+    # simulate the code-level bump: new records carry the new version,
+    # the cache looks in the new generation's directory
+    monkeypatch.setattr("repro.exp.record.SCHEMA_VERSION",
+                        SCHEMA_VERSION + 1)
+    bumped = ResultCache(tmp_cache.root,
+                         schema_version=SCHEMA_VERSION + 1)
+    assert bumped.get(e) is None             # old generation: a miss
+    s0 = sim_count()
+    rec = run(e, cache=bumped)
+    assert sim_count() - s0 == 1             # re-simulated
+    assert rec.schema_version == SCHEMA_VERSION + 1
+    assert bumped.get(e) is not None
+    # the old generation is untouched (inert, not corrupted)
+    assert tmp_cache.get(e) is not None
+
+
+def test_corrupt_cache_file_is_a_miss_not_a_crash(tmp_cache):
+    e = _tiny_exp()
+    rec = run(e)
+    with open(tmp_cache.path_for(e.spec_hash()), "w") as f:
+        f.write("{ not json")
+    rec2 = run(e)
+    assert rec2.to_dict() == rec.to_dict()
+
+
+def test_run_grid_dedupes_and_orders(tmp_cache):
+    e = _tiny_exp()
+    exps = [e, e.with_phi(phi=0.58), e]      # duplicate cell
+    s0 = sim_count()
+    recs = run_grid(exps)
+    assert sim_count() - s0 == 2             # dedupe: 2 unique cells
+    assert [r.spec_hash for r in recs] == [exps[0].spec_hash(),
+                                           exps[1].spec_hash(),
+                                           exps[0].spec_hash()]
+
+
+@pytest.mark.slow
+def test_run_grid_parallel_matches_serial(tmp_cache):
+    g = Grid(_tiny_exp(), {"setup": ("co-1gpu", "dis-ici"),
+                           "batch": (2, 3)})
+    serial = [r.to_dict() for r in run_grid(g, cache=None)]
+    par = [r.to_dict() for r in run_grid(g, parallel=2, cache=None)]
+    assert par == serial
+
+
+def test_run_point_same_spec_is_simulated_exactly_once(tmp_cache):
+    """Regression for the old benchmarks.common.run_point: passing any
+    **kw silently bypassed its dict cache (and rebuilt the config
+    twice). Spec-carried knobs must hit the content-addressed cache."""
+    from benchmarks import common
+    s0 = sim_count()
+    a = common.run_point("dis-ici", 2, phi=0.74)
+    b = common.run_point("dis-ici", 2, phi=0.74)
+    assert sim_count() - s0 == 1
+    assert b.to_dict() == a.to_dict()
+    # and a knob typo is an error, not a silent uncached fork
+    with pytest.raises(TypeError):
+        common.run_point("dis-ici", 2, phii=0.74)
+
+
+def test_rate_point_and_goodput_probe_share_the_cache(tmp_cache):
+    from repro.configs import get_config
+    from repro.workload import run_rate_point
+    cfg = get_config("llama32-3b")
+    slo = SLO(ttft_s=2.0, tpot_s=0.0075)
+    s0 = sim_count()
+    p1 = run_rate_point("dis-ici", cfg, 4.0, slo=slo, n=6)
+    p2 = run_rate_point("dis-ici", cfg, 4.0, slo=slo, n=6)
+    assert sim_count() - s0 == 1
+    assert p1 == p2
+    # a modified (off-registry) config falls back to direct simulation
+    from repro.exp import uncached_sim_count
+    s1, u1 = sim_count(), uncached_sim_count()
+    run_rate_point("dis-ici", cfg.replace(num_layers=2), 4.0, slo=slo,
+                   n=4)
+    assert sim_count() == s1                 # not routed through exp
+    assert uncached_sim_count() == u1 + 1    # ...but counted as such
+
+
+def test_unregistered_workload_types_fall_back_uncached(tmp_cache):
+    """An arrival process / length mix outside the registries cannot be
+    content-addressed: the cell must simulate directly (and be counted
+    as uncached), not crash in the spec encoder."""
+    from dataclasses import dataclass
+    from repro.configs import get_config
+    from repro.exp import uncached_sim_count
+    from repro.workload import run_rate_point
+    from repro.workload.lengths import LengthMix, ReqShape
+
+    @dataclass(frozen=True)
+    class OneShape(LengthMix):
+        def sample(self, n, seed=0):
+            return [ReqShape(256, 4) for _ in range(n)]
+
+    cfg = get_config("llama32-3b")
+    s0, u0 = sim_count(), uncached_sim_count()
+    pt = run_rate_point("dis-ici", cfg, 4.0, lengths=OneShape(),
+                        slo=SLO(ttft_s=2.0, tpot_s=0.0075), n=4)
+    assert pt.setup == "dis-ici" and pt.attainment >= 0.0
+    assert sim_count() == s0
+    assert uncached_sim_count() == u0 + 1
+
+
+# ----------------------------------------------------------------------
+# figure parity: ported fig5/fig6/fig8 smoke JSON payloads are value-
+# identical to the pre-port outputs (captured as goldens)
+# ----------------------------------------------------------------------
+def _golden(name):
+    with open(os.path.join(GOLDENS, name)) as f:
+        return json.load(f)
+
+
+def _as_json(payload):
+    """Normalize an in-process payload the way the figure artifact is
+    written (JSON stringifies non-string dict keys), so the comparison
+    is value-level, not Python-type-level."""
+    return json.loads(json.dumps(payload))
+
+
+@pytest.mark.slow
+def test_fig5_smoke_matches_preport_golden(tmp_cache, tmp_path):
+    from benchmarks import fig5_pareto
+    payload = fig5_pareto.run(smoke=True,
+                              out=str(tmp_path / "fig5.json"))
+    assert _as_json(payload) == _golden("fig5_pareto_smoke.json")
+
+
+@pytest.mark.slow
+def test_fig6_smoke_matches_preport_golden(tmp_cache):
+    from benchmarks import fig6_load_crossover
+    payload = fig6_load_crossover.run(smoke=True)
+    assert _as_json(payload) == _golden("fig6_load_crossover_smoke.json")
+
+
+@pytest.mark.slow
+def test_fig8_smoke_matches_preport_golden(tmp_cache, tmp_path):
+    from benchmarks import fig8_governor_pareto
+    payload = fig8_governor_pareto.run(smoke=True,
+                                       out=str(tmp_path / "fig8.json"))
+    assert _as_json(payload) == _golden("fig8_governor_pareto_smoke.json")
+
+
+@pytest.mark.slow
+def test_figure_payloads_are_pure_cache_reads_when_warm(tmp_cache,
+                                                        tmp_path):
+    """The warm-cache contract behind the CI lane: re-rendering a figure
+    from a warm cache simulates nothing and yields the identical
+    payload."""
+    from benchmarks import fig6_load_crossover
+    cold = fig6_load_crossover.run(smoke=True)
+    s0 = sim_count()
+    warm = fig6_load_crossover.run(smoke=True)
+    assert sim_count() == s0
+    assert warm == cold
