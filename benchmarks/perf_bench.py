@@ -1,0 +1,150 @@
+"""Simulator-core performance benchmark: the BENCH_simcore.json trajectory.
+
+Times COLD simulations (no ``repro.exp`` result cache — clusters and
+workloads are rebuilt every repetition) of three fixed-seed scenarios
+through both steppers:
+
+  small    1 colocated engine, light chat traffic
+  medium   1P:1D over ici, the paper's canonical disaggregated pair
+  fleet    8P:8D over ici under sustained load — the scale at which the
+           exact per-token event loop became the bottleneck and the
+           coalescing fast stepper (DESIGN.md section 13) earns its keep
+
+The committed ``benchmarks/BENCH_simcore.json`` is the tracked baseline:
+re-run with ``--check`` to compare the CURRENT tree against it, failing
+on a >20% regression. Comparisons use the fast/exact *speedup ratio*,
+not absolute wall-clock, so the check is portable across machines — a
+slower CI box slows both steppers alike.
+
+  PYTHONPATH=src python -m benchmarks.perf_bench             # measure
+  PYTHONPATH=src python -m benchmarks.perf_bench --check     # vs baseline
+  PYTHONPATH=src python -m benchmarks.perf_bench --update    # new baseline
+  ... --quick    # fewer repetitions (CI; timings noisier, ratios fine)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, Tuple
+
+from repro.configs import get_config
+from repro.core.orchestrator import make_cluster
+from repro.fleet.cluster import STEPPERS
+from repro.fleet.spec import FleetSpec
+from repro.workload import open_loop_workload, PaperFixedLengths
+
+BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_simcore.json")
+OUT = os.path.join(os.path.dirname(__file__), "out", "BENCH_simcore.json")
+ARCH = "llama32-3b"
+# >20% drop in any scenario's speedup ratio fails --check
+REGRESSION_FRACTION = 0.20
+
+SCENARIOS: Dict[str, Tuple[FleetSpec, dict]] = {
+    "small": (FleetSpec(n_colocated=1),
+              dict(rate=8.0, n=40,
+                   lengths=PaperFixedLengths(1024, 128), seed=0)),
+    "medium": (FleetSpec(n_prefill=1, n_decode=1, medium="ici"),
+               dict(rate=12.0, n=80,
+                    lengths=PaperFixedLengths(2048, 256), seed=0)),
+    "fleet": (FleetSpec(n_prefill=8, n_decode=8, medium="ici"),
+              dict(rate=12.0, n=256,
+                   lengths=PaperFixedLengths(2048, 768), seed=0)),
+}
+
+
+def time_scenario(name: str, stepper: str, reps: int) -> Dict:
+    """Best-of-``reps`` cold wall-clock for one (scenario, stepper).
+    Cold = cluster construction + full simulation, fresh every rep
+    (workload generation is excluded: it is stepper-independent)."""
+    spec, wk = SCENARIOS[name]
+    cfg = get_config(ARCH)
+    best_s, steps = float("inf"), 0
+    for _ in range(reps):
+        requests = open_loop_workload(**wk)
+        t0 = time.perf_counter()
+        cluster = make_cluster(spec, cfg)
+        cluster.run(requests, stepper=stepper)
+        elapsed = time.perf_counter() - t0
+        if elapsed < best_s:
+            best_s = elapsed
+            steps = sum(e.steps for e in cluster.engines)
+    return {"wall_s": round(best_s, 6), "engine_steps": steps,
+            "events_per_s": round(steps / best_s, 1)}
+
+
+def measure(reps: int) -> Dict:
+    out = {"arch": ARCH, "scenarios": {}}
+    for name in SCENARIOS:
+        row = {}
+        for stepper in STEPPERS:
+            row[stepper] = time_scenario(name, stepper, reps)
+            print(f"{name:7s} {stepper:6s} {row[stepper]['wall_s']*1e3:9.1f}ms"
+                  f"  {row[stepper]['events_per_s']:12,.0f} steps/s")
+        row["speedup"] = round(
+            row["exact"]["wall_s"] / row["fast"]["wall_s"], 2)
+        print(f"{name:7s} speedup {row['speedup']:.1f}x")
+        out["scenarios"][name] = row
+    return out
+
+
+def check(current: Dict, baseline: Dict) -> int:
+    """0 when every scenario's speedup is within REGRESSION_FRACTION of
+    the committed baseline ratio, 1 otherwise."""
+    failures = []
+    for name, base_row in baseline["scenarios"].items():
+        cur = current["scenarios"].get(name)
+        if cur is None:
+            failures.append(f"{name}: missing from current run")
+            continue
+        floor = base_row["speedup"] * (1.0 - REGRESSION_FRACTION)
+        status = "ok" if cur["speedup"] >= floor else "REGRESSION"
+        print(f"{name:7s} baseline {base_row['speedup']:6.1f}x  "
+              f"current {cur['speedup']:6.1f}x  floor {floor:6.1f}x  "
+              f"{status}")
+        if cur["speedup"] < floor:
+            failures.append(
+                f"{name}: speedup {cur['speedup']}x < floor {floor:.1f}x "
+                f"(baseline {base_row['speedup']}x)")
+    for f in failures:
+        print("FAIL", f, file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="compare against the committed baseline; exit 1 "
+                         f"on a >{REGRESSION_FRACTION:.0%} speedup drop")
+    ap.add_argument("--update", action="store_true",
+                    help="overwrite the committed baseline")
+    ap.add_argument("--quick", action="store_true",
+                    help="2 repetitions instead of 4")
+    args = ap.parse_args(argv)
+
+    current = measure(reps=2 if args.quick else 4)
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(current, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print("wrote", OUT)
+
+    if args.update:
+        with open(BASELINE, "w") as f:
+            json.dump(current, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print("baseline updated:", BASELINE)
+        return 0
+    if args.check:
+        if not os.path.exists(BASELINE):
+            print("no committed baseline at", BASELINE, file=sys.stderr)
+            return 1
+        with open(BASELINE) as f:
+            return check(current, json.load(f))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

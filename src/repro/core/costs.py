@@ -20,6 +20,8 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
 
 
@@ -179,6 +181,45 @@ class CostModel:
                        + self.kv_bytes_per_token * batch)  # new-token write
         return StepCost(compute_s=flops / self.acc.peak_flops,
                         memory_s=bytes_moved / self.acc.hbm_bw)
+
+    def decode_step_arrays(self, batch: int, ctx0_sum: int, k: int,
+                           phi: float = 1.0
+                           ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Per-step ``(dt, watts)`` arrays for ``k`` consecutive decode
+        steps of a fixed ``batch`` whose context sum starts at
+        ``ctx0_sum`` and grows by ``batch`` each step — the uniform run
+        the coalescing fast stepper consumes (DESIGN.md section 13).
+
+        Element ``i`` reproduces the scalar pipeline
+        ``decode_cost(batch, ctx0_sum + i*batch)`` -> ``StepCost.time``
+        / ``utilization`` -> ``power_w`` bit-for-bit: the flop/byte
+        counts are exact integers that convert exactly to float64 below
+        2**53, and every float op keeps the scalar expression's
+        association. Returns ``None`` when that guarantee would not hold
+        (astronomical contexts) so callers fall back to the exact
+        stepper rather than drift."""
+        ctx_max = ctx0_sum + (k - 1) * batch
+        flops_max = self.flops_per_token * batch \
+            + self.attn_flops_per_tok_ctx * ctx_max
+        bytes_max = (self.param_bytes_active
+                     + self.kv_bytes_per_token * ctx_max
+                     + self.state_bytes * batch
+                     + self.kv_bytes_per_token * batch)
+        if max(flops_max, bytes_max) >= 2 ** 53:
+            return None
+        ctx = ctx0_sum + np.arange(k, dtype=np.int64) * batch
+        flops = self.flops_per_token * batch \
+            + self.attn_flops_per_tok_ctx * ctx
+        bytes_moved = (self.param_bytes_active
+                       + self.kv_bytes_per_token * ctx
+                       + self.state_bytes * batch
+                       + self.kv_bytes_per_token * batch)
+        scaled = (flops / self.acc.peak_flops) / phi
+        memory_s = bytes_moved / self.acc.hbm_bw
+        dt = np.maximum(scaled, memory_s)       # interconnect term is 0
+        util = np.minimum(1.0, scaled / dt)
+        watts = self.acc.p_static_w + self.acc.p_dyn_w * util * phi ** 3
+        return dt, watts
 
     # ------------------------------------------------------------------
     # first-order per-token rates: the signals online governors and the

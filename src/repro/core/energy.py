@@ -18,7 +18,20 @@ import collections
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
+import numpy as np
+
 from repro.govern.telemetry import ACTIVE, IDLE, PowerTrace
+
+
+def seq_sum(base: float, vals: np.ndarray) -> float:
+    """Left-fold ``base + vals[0] + vals[1] + ...`` with rounding
+    identical to the scalar loop (np.cumsum accumulates sequentially, so
+    the result is bit-equal to repeated ``+=``). The coalescing fast
+    stepper uses this to replay a run's worth of float accumulation in
+    one vector op without perturbing golden totals."""
+    if len(vals) == 0:
+        return base
+    return float(np.cumsum(np.concatenate(((base,), vals)))[-1])
 
 
 @dataclass
@@ -44,6 +57,22 @@ class EnergyMeter:
         if self.trace is not None and t0 is not None:
             self.trace.record(component, t0, t0 + seconds, watts, stage,
                               state=IDLE if stage == "idle" else ACTIVE)
+
+    def add_power_run(self, component: str, watts: np.ndarray,
+                      seconds: np.ndarray, stage: str,
+                      t0s: Optional[np.ndarray] = None):
+        """Bulk equivalent of ``len(watts)`` sequential ``add_power``
+        calls: joules fold left-to-right (bit-equal to the scalar loop,
+        see ``seq_sum``) and the trace — when attached — gains one
+        ``PowerSample`` per element with ``t1 = t0 + seconds`` computed
+        elementwise exactly as the scalar path does."""
+        vals = watts * seconds
+        self.joules[component] = seq_sum(self.joules[component], vals)
+        self.by_stage[stage] = seq_sum(self.by_stage[stage], vals)
+        if self.trace is not None and t0s is not None:
+            self.trace.record_run(component, t0s, t0s + seconds, watts,
+                                  stage,
+                                  state=IDLE if stage == "idle" else ACTIVE)
 
     @property
     def total_j(self) -> float:

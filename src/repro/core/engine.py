@@ -92,14 +92,29 @@ class Engine:
         self.pending_fetch: deque = deque()
         self.steps = 0
         self.preemptions = 0
+        # cached steady-state decode run (repro.core.fastpath); always
+        # validated against live state before reuse, so stale entries
+        # are harmless
+        self._fastrun = None
 
     # ------------------------------------------------------------------
+    def _quiescent(self) -> bool:
+        """No queued or in-flight work of any kind."""
+        return not (self.waiting or self.prefilling or self.running
+                    or self.decode_queue or self.pending_fetch)
+
     def submit(self, req: Request) -> None:
-        # a request cannot be worked on before it arrives: an idle
-        # engine's clock fast-forwards to the arrival instant (a busy
-        # engine's clock is already past it and max() is a no-op), so
-        # prefill_start_s >= arrival_s and TTFT is never negative
-        self.t = max(self.t, req.arrival_s)
+        # A request cannot be worked on before it arrives: a QUIESCENT
+        # engine's clock fast-forwards to the arrival instant. An engine
+        # that still holds work must NOT be clamped — the old
+        # unconditional max() teleported a blocked engine's clock past
+        # its queued work, billing that work a phantom wait (the latent
+        # single-engine drift this PR's unit tests pin down). Instead,
+        # _admit gates each sequence on arrival_s <= clock, and step()
+        # skips an idle clock forward when all queued work lies in the
+        # future — so prefill_start_s >= arrival_s still always holds.
+        if self._quiescent():
+            self.t = max(self.t, req.arrival_s)
         seq = EngineSeq(req=req, prefill_target=req.prompt_len)
         if self.prefix_cache is not None and req.prompt_tokens is not None:
             hit = self.prefix_cache.lookup(req.prompt_tokens)
@@ -164,9 +179,17 @@ class Engine:
 
     def _admit(self) -> None:
         if self.role in ("colocated", "prefill"):
-            # V1-style: admission is cheap; per-chunk allocation throttles
-            while self.waiting and self.pool.free_pages > 0:
-                seq = self.waiting.pop(0)
+            # V1-style: admission is cheap; per-chunk allocation throttles.
+            # Only ARRIVED sequences are admitted (arrival_s <= clock):
+            # priority order is req_id, which need not be arrival order,
+            # so each entry is gated individually rather than head-only.
+            i = 0
+            while i < len(self.waiting) and self.pool.free_pages > 0:
+                seq = self.waiting[i]
+                if seq.req.arrival_s > self.t:
+                    i += 1
+                    continue
+                self.waiting.pop(i)
                 if seq.req.prefill_start_s is None:
                     seq.req.prefill_start_s = self.t
                 bisect.insort(self.prefilling, seq,
@@ -196,6 +219,18 @@ class Engine:
             return self._prefill_step()
         if self.running:
             return self._decode_step()
+        if self.waiting and self.pool.free_pages > 0 \
+                and self.role in ("colocated", "prefill"):
+            # nothing schedulable now but queued arrivals lie in the
+            # future: an otherwise-idle engine skips its clock to the
+            # earliest one (a bare engine driven by step() alone must
+            # not deadlock; in a cluster an event usually fires first)
+            t_next = min(s.req.arrival_s for s in self.waiting)
+            if t_next > self.t:
+                self.t = t_next
+                self._admit()
+                if self.prefilling:
+                    return self._prefill_step()
         return False
 
     # ------------------------------------------------------------------

@@ -38,7 +38,15 @@ class PagedKVPool:
         assert num_pages > 0
         self.num_pages = num_pages
         self.page_size = page_size
-        self.free: List[int] = list(range(num_pages - 1, -1, -1))
+        # Lazy freelist: pages never granted yet are the implicit range
+        # [_next_fresh, num_pages); returned pages form an explicit LIFO
+        # stack. Grant order (returned pages LIFO first, then fresh
+        # ascending) is identical to the eager list(range(N-1, -1, -1))
+        # this replaces — page ids are observable through block tables —
+        # while construction is O(1) instead of O(num_pages), which
+        # matters when a fleet sweep builds hundreds of ~1M-page pools.
+        self._returned: List[int] = []
+        self._next_fresh = 0
         self.seqs: Dict[int, SeqAlloc] = {}
         self._lru: "collections.OrderedDict[int, None]" = \
             collections.OrderedDict()
@@ -62,11 +70,27 @@ class PagedKVPool:
 
     @property
     def used_pages(self) -> int:
-        return self.num_pages - len(self.free)
+        return self.num_pages - self.free_pages
 
     @property
     def free_pages(self) -> int:
-        return len(self.free)
+        return len(self._returned) + (self.num_pages - self._next_fresh)
+
+    @property
+    def free(self) -> List[int]:
+        """Materialized freelist in the eager layout this class used to
+        keep (fresh pages descending, then returned pages in return
+        order; ``pop()`` order from the end matches ``_pop_free``).
+        O(num_pages) — for invariant checks and tests only."""
+        return list(range(self.num_pages - 1, self._next_fresh - 1, -1)) \
+            + self._returned
+
+    def _pop_free(self) -> int:
+        if self._returned:
+            return self._returned.pop()
+        page = self._next_fresh
+        self._next_fresh += 1
+        return page
 
     def block_table(self, seq_id: int) -> List[int]:
         return list(self.seqs[seq_id].pages)
@@ -79,7 +103,7 @@ class PagedKVPool:
 
     # ------------------------------------------------------------------
     def can_fit(self, tokens: int) -> bool:
-        return self.pages_for(tokens) <= len(self.free)
+        return self.pages_for(tokens) <= self.free_pages
 
     def allocate(self, seq_id: int, tokens: int) -> List[int]:
         """Materialize ``tokens`` MORE tokens for seq_id; returns any newly
@@ -87,10 +111,23 @@ class PagedKVPool:
         alloc = self.seqs.setdefault(seq_id, SeqAlloc(seq_id))
         new_total = alloc.tokens + tokens
         need = self.pages_for(new_total) - len(alloc.pages)
-        if need > len(self.free):
+        if need > self.free_pages:
             raise OutOfPages(
-                f"seq {seq_id}: need {need} pages, {len(self.free)} free")
-        granted = [self.free.pop() for _ in range(need)]
+                f"seq {seq_id}: need {need} pages, {self.free_pages} free")
+        # bulk grant, identical order to `need` sequential _pop_free()
+        # calls (returned LIFO first, then fresh ascending) without the
+        # per-page call overhead — a 2048-token prefill grants 128 pages
+        granted = []
+        if need:
+            take = min(need, len(self._returned))
+            if take:
+                granted = self._returned[-take:][::-1]
+                del self._returned[-take:]
+            fresh = need - take
+            if fresh:
+                granted.extend(range(self._next_fresh,
+                                     self._next_fresh + fresh))
+                self._next_fresh += fresh
         alloc.pages.extend(granted)
         alloc.tokens = new_total
         self.touch(seq_id)
@@ -102,7 +139,7 @@ class PagedKVPool:
         self._lru.pop(seq_id, None)
         if alloc is None:
             return 0
-        self.free.extend(alloc.pages)
+        self._returned.extend(alloc.pages)
         return len(alloc.pages)
 
     # ------------------------------------------------------------------

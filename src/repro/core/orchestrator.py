@@ -54,5 +54,11 @@ def make_cluster(setup: Union[str, FleetSpec], cfg: ModelConfig,
 
 
 def run_setup(setup: Union[str, FleetSpec], cfg: ModelConfig,
-              requests: List[Request], **kw) -> SetupResult:
-    return make_cluster(setup, cfg, **kw).run(requests)
+              requests: List[Request], *, stepper: Optional[str] = None,
+              max_steps: int = 2_000_000, **kw) -> SetupResult:
+    """Build and run a cluster. ``stepper`` picks the simulation core:
+    "fast" (coalescing, the default), "exact" (reference event loop);
+    None defers to ``repro.fleet.cluster.DEFAULT_STEPPER`` /
+    ``REPRO_STEPPER``. Remaining kwargs go to the constructor."""
+    return make_cluster(setup, cfg, **kw).run(requests, max_steps=max_steps,
+                                              stepper=stepper)

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import os
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
@@ -27,6 +28,7 @@ from repro.configs.base import ModelConfig
 from repro.core.costs import AcceleratorSpec, CostModel, HostSpec
 from repro.core.energy import EnergyMeter
 from repro.core.engine import Engine, EngineSeq, RealExecutor
+from repro.core.fastpath import coalesce_window
 from repro.core.kvcache import PagedKVPool
 from repro.core.request import Request, WorkloadMetrics, summarize
 from repro.core.transfer import TransferPath, make_path
@@ -37,6 +39,14 @@ from .router import Router
 from .spec import FleetSpec, as_fleet_spec
 
 Phi = Union[float, Tuple[float, ...]]
+
+# Default stepper for FleetCluster.run: "fast" coalesces steady-state
+# decode runs (repro.core.fastpath), "exact" is the retained one-step-
+# per-token reference the parity harness differentially tests against.
+# The two are observably identical (tests/test_fastpath_parity.py);
+# REPRO_STEPPER=exact flips the default for debugging a suspect run.
+STEPPERS = ("fast", "exact")
+DEFAULT_STEPPER = os.environ.get("REPRO_STEPPER", "fast")
 
 
 @dataclass
@@ -223,9 +233,18 @@ class FleetCluster:
                        lambda r=r: self.frontend.pick().submit(r))
 
     # ------------------------------------------------------------------
-    def run(self, requests: List[Request],
-            max_steps: int = 2_000_000) -> SetupResult:
-        self.submit(requests)
+    def _run_loop(self, max_steps: int, fast: bool) -> int:
+        """The discrete-event loop. With ``fast=False`` this is the
+        retained exact reference: pick the min-clock engine with work,
+        fire any heap event due at-or-before its clock first, step it
+        once. With ``fast=True`` the same loop first offers the
+        candidate set to ``repro.core.fastpath.coalesce_window``, which
+        advances every steady-state-decode engine to the next
+        interesting time in vectorized runs and returns 0 whenever the
+        situation is non-uniform (prefill, fetch, admission, online
+        governor, pool pressure) — in which case this loop takes one
+        exact step, keeping the two steppers observably identical."""
+        order = {e: i for i, e in enumerate(self.engines)}
         steps = 0
         stalled = set()   # engines that made no progress; wait for an event
         while steps < max_steps:
@@ -242,6 +261,9 @@ class FleetCluster:
                     fn()
                     stalled.clear()
                     continue
+                if fast and coalesce_window(candidates, order,
+                                            t_next_event):
+                    continue
                 if not eng.step():
                     # no progress (e.g. pool blocked by in-flight stores):
                     # park until the next event frees resources
@@ -253,6 +275,15 @@ class FleetCluster:
                 stalled.clear()
                 continue
             break
+        return steps
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request], max_steps: int = 2_000_000,
+            stepper: Optional[str] = None) -> SetupResult:
+        stepper = stepper or DEFAULT_STEPPER
+        assert stepper in STEPPERS, stepper
+        self.submit(requests)
+        steps = self._run_loop(max_steps, fast=(stepper == "fast"))
 
         unfinished = [r for r in requests if not r.done]
         assert not unfinished, (

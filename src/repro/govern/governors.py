@@ -45,6 +45,13 @@ class Governor:
     """Base controller: subclasses implement ``decide(engine) -> phi``."""
 
     name = "base"
+    # True only when decide() is constant over a steady-state decode run
+    # (no dependence on queues/clock), so the coalescing fast stepper
+    # may invoke on_step once per run instead of once per token-step.
+    # Online controllers (queue-depth, slo-slack) read live signals every
+    # step and MUST keep False: the fast path then bails to the exact
+    # stepper whenever they are installed (DESIGN.md section 13).
+    coalescible = False
 
     def __init__(self, grid: Optional[Sequence[float]] = None,
                  seed: int = 0):
@@ -78,6 +85,7 @@ class StaticGovernor(Governor):
     ``tests/test_fleet.py`` run through it."""
 
     name = "static"
+    coalescible = True      # decide() ignores queues/clock: run-invariant
 
     def __init__(self, phi: Optional[float] = None, **kw):
         super().__init__(**kw)

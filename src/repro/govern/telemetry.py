@@ -21,6 +21,8 @@ import collections
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 ACTIVE, IDLE = "active", "idle"
 
 
@@ -43,6 +45,36 @@ class PowerSample:
         return self.watts * self.seconds
 
 
+class _RunBlock:
+    """A contiguous run of constant-stage samples, stored as arrays and
+    expanded to ``PowerSample`` objects only when somebody reads the
+    per-sample view. ``t1s[i] == t0s[i+1]`` (checked at record time), so
+    for coverage/energy queries the block acts as one interval."""
+
+    __slots__ = ("t0s", "t1s", "watts", "stage", "state")
+
+    def __init__(self, t0s, t1s, watts, stage, state):
+        self.t0s = t0s
+        self.t1s = t1s
+        self.watts = watts
+        self.stage = stage
+        self.state = state
+
+    def expand(self, component: str) -> List[PowerSample]:
+        # direct __dict__ fill: a frozen dataclass pays one
+        # object.__setattr__ per field in __init__, which dominates when
+        # a fleet run expands tens of thousands of samples
+        new = object.__new__
+        out = []
+        for a, b, w in zip(self.t0s.tolist(), self.t1s.tolist(),
+                           self.watts.tolist()):
+            s = new(PowerSample)
+            s.__dict__.update(component=component, t0=a, t1=b, watts=w,
+                              stage=self.stage, state=self.state)
+            out.append(s)
+        return out
+
+
 class PowerTrace:
     """Append-only per-component power timeline.
 
@@ -51,28 +83,86 @@ class PowerTrace:
     existed, so golden-metric parity is bit-exact); the trace is the
     sampled view a plotter or governor post-mortem reads. The two agree
     to fp rounding wherever an interval was recorded with a timestamp.
+
+    Internally a component's timeline is a list of chunks — single
+    ``PowerSample`` objects or lazily-expanded ``_RunBlock`` runs from
+    the coalescing fast stepper. Coverage and energy queries consume
+    chunks directly; ``samples`` materializes the flat per-sample lists
+    (identical, in order, to recording every sample individually).
     """
 
     def __init__(self):
-        self.samples: Dict[str, List[PowerSample]] = \
-            collections.defaultdict(list)
+        self._chunks: Dict[str, List[object]] = collections.defaultdict(list)
+        # per-component expansion cache: (expanded list, chunks consumed)
+        self._expanded: Dict[str, Tuple[List[PowerSample], int]] = {}
 
     # ------------------------------------------------------------------
     def record(self, component: str, t0: float, t1: float, watts: float,
                stage: str = "other", state: str = ACTIVE) -> None:
         if t1 <= t0:
             return                      # zero-length interval: nothing
-        self.samples[component].append(
+        self._chunks[component].append(
             PowerSample(component, t0, t1, watts, stage, state))
+
+    def record_run(self, component: str, t0s, t1s, watts,
+                   stage: str = "other", state: str = ACTIVE,
+                   contiguous: bool = False) -> None:
+        """Bulk ``record``: one sample per element, zero-length intervals
+        skipped — observably identical to n sequential calls. A
+        contiguous strictly-positive run (the only thing the fast
+        stepper emits) is kept as one ``_RunBlock``; anything else falls
+        back to per-sample records. ``contiguous=True`` asserts the run
+        property (t1s[i] == t0s[i+1] > t0s[i]) without the O(n) check —
+        for callers that slice the run from one strictly-increasing
+        cumulative-time array."""
+        n = len(t0s)
+        if n == 0:
+            return
+        if contiguous or (bool((t1s > t0s).all()) and
+                          (n == 1 or bool((t0s[1:] == t1s[:-1]).all()))):
+            self._chunks[component].append(
+                _RunBlock(t0s, t1s, watts, stage, state))
+            return
+        for a, b, w in zip(t0s.tolist(), t1s.tolist(), watts.tolist()):
+            self.record(component, a, b, w, stage, state)
 
     @property
     def components(self) -> List[str]:
-        return sorted(self.samples)
+        return sorted(self._chunks)
+
+    # ------------------------------------------------------------------
+    def _samples_of(self, component: str) -> List[PowerSample]:
+        """Flat per-sample list for one component (cached; chunk lists
+        are append-only, so the cache only ever expands the new tail)."""
+        chunks = self._chunks.get(component)
+        if not chunks:
+            return []
+        out, done = self._expanded.get(component, ([], 0))
+        for chunk in chunks[done:]:
+            if isinstance(chunk, _RunBlock):
+                out.extend(chunk.expand(component))
+            else:
+                out.append(chunk)
+        self._expanded[component] = (out, len(chunks))
+        return out
+
+    @property
+    def samples(self) -> Dict[str, List[PowerSample]]:
+        return {c: self._samples_of(c) for c in self._chunks}
 
     # ------------------------------------------------------------------
     def intervals(self, component: str) -> List[Tuple[float, float]]:
         """Covered (t0, t1) intervals, merged and sorted."""
-        ivs = sorted((s.t0, s.t1) for s in self.samples.get(component, []))
+        ivs = []
+        for chunk in self._chunks.get(component, []):
+            if isinstance(chunk, _RunBlock):
+                # contiguous by construction: one interval per run
+                ivs.append((float(chunk.t0s[0]), float(chunk.t1s[-1])))
+            else:
+                ivs.append((chunk.t0, chunk.t1))
+        # engine samples arrive in clock order, so this list is almost
+        # always already sorted; Timsort makes the check effectively free
+        ivs.sort()
         merged: List[Tuple[float, float]] = []
         for t0, t1 in ivs:
             if merged and t0 <= merged[-1][1]:
@@ -115,19 +205,42 @@ class PowerTrace:
                  state: Optional[str] = None) -> float:
         """Trace-integrated joules, filterable by component / state."""
         comps = [component] if component is not None else self.components
-        return sum(s.joules
-                   for c in comps for s in self.samples.get(c, [])
-                   if state is None or s.state == state)
+        total = 0.0
+        for c in comps:
+            for chunk in self._chunks.get(c, []):
+                if state is not None and chunk.state != state:
+                    continue
+                if isinstance(chunk, _RunBlock):
+                    total += float(np.dot(chunk.watts,
+                                          chunk.t1s - chunk.t0s))
+                else:
+                    total += chunk.joules
+        return total
 
     def busy_s(self, component: str) -> float:
-        return sum(s.seconds for s in self.samples.get(component, [])
-                   if s.state == ACTIVE)
+        total = 0.0
+        for chunk in self._chunks.get(component, []):
+            if chunk.state != ACTIVE:
+                continue
+            if isinstance(chunk, _RunBlock):
+                total += float(chunk.t1s[-1] - chunk.t0s[0])  # contiguous
+            else:
+                total += chunk.seconds
+        return total
 
     def span(self, component: str) -> Tuple[float, float]:
-        ss = self.samples.get(component, [])
-        if not ss:
+        chunks = self._chunks.get(component, [])
+        if not chunks:
             return (0.0, 0.0)
-        return (min(s.t0 for s in ss), max(s.t1 for s in ss))
+        t0s, t1s = [], []
+        for chunk in chunks:
+            if isinstance(chunk, _RunBlock):
+                t0s.append(float(chunk.t0s[0]))
+                t1s.append(float(chunk.t1s[-1]))
+            else:
+                t0s.append(chunk.t0)
+                t1s.append(chunk.t1)
+        return (min(t0s), max(t1s))
 
     def covers(self, component: str, t0: float, t1: float,
                tol: float = 1e-9) -> bool:
@@ -147,7 +260,7 @@ class PowerTrace:
         step = (t1 - t0) / n
         times = [t0 + (i + 0.5) * step for i in range(n)]
         watts = [0.0] * n
-        for s in self.samples.get(component, []):
+        for s in self._samples_of(component):
             # uniform grid: each sample covers a contiguous index range
             # (O(samples + n) total, not O(samples * n))
             lo = max(0, int((s.t0 - t0) / step) - 1)
@@ -165,9 +278,14 @@ class PowerTrace:
         for c in self.components:
             row = {"active_j": 0.0, "idle_j": 0.0,
                    "active_s": 0.0, "idle_s": 0.0}
-            for s in self.samples[c]:
-                key = "active" if s.state == ACTIVE else "idle"
-                row[f"{key}_j"] += s.joules
-                row[f"{key}_s"] += s.seconds
+            for chunk in self._chunks[c]:
+                key = "active" if chunk.state == ACTIVE else "idle"
+                if isinstance(chunk, _RunBlock):
+                    row[f"{key}_j"] += float(np.dot(
+                        chunk.watts, chunk.t1s - chunk.t0s))
+                    row[f"{key}_s"] += float(chunk.t1s[-1] - chunk.t0s[0])
+                else:
+                    row[f"{key}_j"] += chunk.joules
+                    row[f"{key}_s"] += chunk.seconds
             out[c] = row
         return out

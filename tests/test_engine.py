@@ -128,3 +128,83 @@ def test_dvfs_slows_compute_bound_steps():
     slow_d = dc.time(0.5) / dc.time(1.0)
     assert slow_p > 1.6              # prefill nearly halves in speed
     assert slow_d < slow_p           # decode barely notices
+
+
+# ----------------------------------------------------------------------
+# the latent single-engine drift (satellite fix): submit() must clamp
+# the clock forward only on a QUIESCENT engine, and a bare engine driven
+# by step() alone must neither serve early nor deadlock on future work
+# ----------------------------------------------------------------------
+def test_submit_clamps_clock_only_when_quiescent():
+    eng, pool, meter = _mk_engine("colocated")
+    late = random_workload(2, input_len=64, output_len=4)
+    late[0].arrival_s = 5.0
+    eng.submit(late[0])
+    assert eng.t == 5.0              # quiescent: fast-forward to arrival
+
+    eng2, _, _ = _mk_engine("colocated")
+    held = random_workload(1, input_len=64, output_len=4)[0]
+    eng2.submit(held)                # arrival 0: engine now holds work
+    late[1].arrival_s = 1000.0
+    eng2.submit(late[1])
+    # the old unconditional max() teleported the clock to 1000s here,
+    # billing the queued request a phantom kilosecond of wait
+    assert eng2.t == 0.0
+    while not held.done:
+        assert eng2.step()
+    assert held.prefill_start_s < 1.0
+
+
+def test_bare_engine_gates_admission_on_arrival():
+    """step()-driven engine with staggered arrivals: every request is
+    served after it arrives, and the idle fast-forward keeps a bare
+    engine from deadlocking on all-future work."""
+    eng, pool, meter = _mk_engine("colocated")
+    reqs = random_workload(3, input_len=64, output_len=4)
+    for i, r in enumerate(reqs):
+        r.arrival_s = 2.0 * i + 1.0  # all strictly in the future
+        eng.submit(r)
+    for _ in range(2000):
+        if not eng.step():
+            break
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        assert r.prefill_start_s >= r.arrival_s
+
+
+def test_governor_runs_on_bare_engine():
+    """The governor hook is an Engine feature, not a fleet feature: a
+    bare engine retunes phi from its own step loop."""
+    from repro.govern import make_governor
+
+    eng, pool, meter = _mk_engine("colocated")
+    gov = make_governor("queue-depth", grid=(0.5, 1.0))
+    eng.governor = gov
+    reqs = _submit(eng, 4, prompt=256, out=8)
+    for _ in range(2000):
+        if not eng.step():
+            break
+    assert all(r.done for r in reqs)
+    # backlog pushed phi to the grid ceiling, drain coasted at the floor
+    phis = {d.phi for d in gov.decisions}
+    assert phis, "governor never retuned a bare engine"
+    assert phis <= {0.5, 1.0}
+    assert eng.phi == 0.5            # empty queue at the end: floor
+
+
+def test_add_power_run_matches_scalar_fold_bitwise():
+    """The bulk accumulation API folds joules left-to-right exactly like
+    n sequential add_power calls — the contract the coalescing fast
+    stepper's cumulative-sum caches rely on."""
+    import numpy as np
+
+    watts = np.array([37.5, 912.0, 3.25e-3, 640.0, 1e6])
+    secs = np.array([1e-7, 0.333, 42.0, 1e-3, 7e-9])
+    a, b = EnergyMeter(), EnergyMeter()
+    a.add("acc0", 1.0, "decode")
+    b.add("acc0", 1.0, "decode")
+    for w, s in zip(watts, secs):
+        a.add_power("acc0", w, s, stage="decode")
+    b.add_power_run("acc0", watts, secs, stage="decode")
+    assert a.joules["acc0"] == b.joules["acc0"]
+    assert a.by_stage["decode"] == b.by_stage["decode"]

@@ -1,0 +1,180 @@
+"""Differential fuzzing: the coalescing fast stepper vs the exact one.
+
+DESIGN.md section 13's correctness contract, executed: any (fleet shape,
+router, governor, arrival process, length mix, seed) drawn here must
+produce OBSERVABLY IDENTICAL results through both steppers — bit-equal
+metrics, per-request timestamps, per-component joules, and power-trace
+samples; per-stage joules to 1e-9 relative (cross-engine fold order is
+relaxed, see fastpath module docstring). No tolerance anywhere else: a
+single flipped bit anywhere in the simulation is a failure.
+
+The deterministic grid below always runs (no hypothesis needed); the
+``@given`` fuzz adds randomized shapes on top. CI's parity lane turns
+the example count up via ``REPRO_PARITY_EXAMPLES`` (200+); the default
+stays small enough for the tier-1 wall-clock budget.
+"""
+import dataclasses
+import os
+
+import pytest
+
+from hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
+
+from repro.configs import get_config
+from repro.core.orchestrator import run_setup
+from repro.fleet.spec import FleetSpec
+from repro.workload import (DEFAULT_INTERACTIVE_SLO, PaperFixedLengths,
+                            ShareGPTLengths, open_loop_workload)
+
+CFG = get_config("llama32-3b")
+
+REQUEST_FIELDS = ("arrival_s", "prefill_start_s", "prefill_done_s",
+                  "decode_start_s", "first_token_s", "finish_s",
+                  "generated", "evictions", "recomputed_tokens",
+                  "reused_tokens")
+
+
+def run_both(spec, wk):
+    out = {}
+    for stepper in ("exact", "fast"):
+        reqs = open_loop_workload(**wk)
+        out[stepper] = (run_setup(spec, CFG, reqs, stepper=stepper), reqs)
+    return out
+
+
+def assert_parity(spec, wk):
+    both = run_both(spec, wk)
+    (res_e, reqs_e), (res_f, reqs_f) = both["exact"], both["fast"]
+
+    # workload metrics: every aggregate, bit-for-bit
+    assert dataclasses.asdict(res_e.metrics) == \
+        dataclasses.asdict(res_f.metrics)
+
+    # per-request lifecycle timestamps and counters, bit-for-bit
+    for a, b in zip(reqs_e, reqs_f):
+        for f in REQUEST_FIELDS:
+            assert getattr(a, f) == getattr(b, f), \
+                (f"req {a.req_id} field {f}: "
+                 f"{getattr(a, f)!r} != {getattr(b, f)!r}")
+
+    # per-component joules fold in engine order on both paths: bit-exact
+    assert res_e.energy.joules == res_f.energy.joules
+
+    # per-stage joules: cross-engine accumulation order is relaxed
+    se, sf = res_e.energy.by_stage, res_f.energy.by_stage
+    assert set(se) == set(sf)
+    for k in se:
+        assert sf[k] == pytest.approx(se[k], rel=1e-9, abs=1e-12), k
+
+    # the power-state timeline: identical samples, in order
+    te, tf = res_e.energy.trace, res_f.energy.trace
+    assert te.components == tf.components
+    for c in te.components:
+        assert te.samples[c] == tf.samples[c], \
+            f"trace[{c}] samples diverge"
+
+
+# ----------------------------------------------------------------------
+# deterministic grid: every setup archetype x a workload that exercises
+# admission waves, transfer legs, and steady-state decode
+# ----------------------------------------------------------------------
+GRID = [
+    (FleetSpec(n_colocated=1),
+     dict(rate=4.0, n=12, lengths=PaperFixedLengths(4096, 32),
+          slo=DEFAULT_INTERACTIVE_SLO, seed=0)),
+    (FleetSpec(n_colocated=2),
+     dict(rate=8.0, n=16, lengths=PaperFixedLengths(2048, 128), seed=1)),
+    (FleetSpec(n_prefill=1, n_decode=1, medium="ici"),
+     dict(rate=4.0, n=12, lengths=PaperFixedLengths(4096, 32),
+          slo=DEFAULT_INTERACTIVE_SLO, seed=0)),
+    (FleetSpec(n_prefill=2, n_decode=2, medium="host",
+               kv_router="least-outstanding-tokens"),
+     dict(rate=8.0, n=16, lengths=PaperFixedLengths(2048, 128), seed=1)),
+    (FleetSpec(n_prefill=1, n_decode=2, medium="disk",
+               phi_decode=(0.8, 1.0)),
+     dict(rate=2.0, n=10, lengths=ShareGPTLengths(), seed=2)),
+    # online governor: fast path must bail to the exact stepper and
+    # still match it bit-for-bit
+    (FleetSpec(n_prefill=2, n_decode=1, medium="ici", phi_prefill=0.7,
+               governor="queue-depth"),
+     dict(rate=4.0, n=10, lengths=PaperFixedLengths(2048, 64), seed=3)),
+    (FleetSpec(n_colocated=2, governor="slo-slack"),
+     dict(rate=6.0, n=10, lengths=PaperFixedLengths(1024, 64),
+          slo=DEFAULT_INTERACTIVE_SLO, seed=4)),
+    # tiny pool pressure: colocated growth hits preemption -> exact
+    (FleetSpec(n_colocated=1),
+     dict(rate=16.0, n=12, lengths=PaperFixedLengths(8192, 256),
+          seed=5)),
+]
+
+
+@pytest.mark.parametrize("case", range(len(GRID)))
+def test_parity_grid(case):
+    spec, wk = GRID[case]
+    assert_parity(spec, wk)
+
+
+def test_stepper_arg_validation():
+    reqs = open_loop_workload(rate=4.0, n=2,
+                              lengths=PaperFixedLengths(256, 8), seed=0)
+    with pytest.raises(AssertionError):
+        run_setup("co-1gpu", CFG, reqs, stepper="warp")
+
+
+# ----------------------------------------------------------------------
+# randomized fuzz over the full spec product space
+# ----------------------------------------------------------------------
+MEDIA = ("ici", "host", "disk")
+GOVERNORS = ("static", "queue-depth", "slo-slack")
+ROUTERS = ("round-robin", "least-outstanding-tokens")
+KV_ROUTERS = ("kv-free-space", "least-outstanding-tokens")
+ARRIVALS = ("poisson", "gamma")
+
+N_EXAMPLES = int(os.environ.get("REPRO_PARITY_EXAMPLES", "20"))
+
+
+def _spec_strategy():
+    colocated = st.builds(
+        lambda n, gov: FleetSpec(n_colocated=n, governor=gov),
+        st.integers(1, 2), st.sampled_from(GOVERNORS))
+    disagg = st.builds(
+        lambda p, d, m, r, kr, gov, phi_p, phi_d: FleetSpec(
+            n_prefill=p, n_decode=d, medium=m, router=r, kv_router=kr,
+            governor=gov, phi_prefill=phi_p, phi_decode=phi_d),
+        st.integers(1, 3), st.integers(1, 3), st.sampled_from(MEDIA),
+        st.sampled_from(ROUTERS), st.sampled_from(KV_ROUTERS),
+        st.sampled_from(GOVERNORS),
+        st.sampled_from((0.6, 0.8, 1.0)), st.sampled_from((0.7, 1.0)))
+    return st.one_of(colocated, disagg)
+
+
+def _workload_strategy():
+    fixed = st.builds(
+        lambda p, o: PaperFixedLengths(p, o),
+        st.sampled_from((512, 2048, 4096, 8192)),
+        st.sampled_from((1, 8, 32, 128, 256)))
+    sharegpt = st.just(ShareGPTLengths())
+    return st.builds(
+        lambda rate, n, lengths, arrival, slo, seed: dict(
+            rate=rate, n=n, lengths=lengths, arrival=arrival,
+            slo=slo, seed=seed),
+        st.sampled_from((1.0, 4.0, 12.0, 32.0)),
+        st.integers(2, 14),
+        st.one_of(fixed, sharegpt),
+        st.sampled_from(ARRIVALS),
+        st.sampled_from((None, DEFAULT_INTERACTIVE_SLO)),
+        st.integers(0, 2 ** 16))
+
+
+if HAS_HYPOTHESIS:
+    from hypothesis import HealthCheck
+
+    @settings(max_examples=N_EXAMPLES, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(spec=_spec_strategy(), wk=_workload_strategy())
+    def test_parity_fuzz(spec, wk):
+        assert_parity(spec, wk)
+else:  # pragma: no cover - container without the dev extra
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_parity_fuzz():
+        pass

@@ -321,6 +321,7 @@ def _random_spec(colocated, x, y, medium_i, policy_i):
         kv_router=policies[(policy_i + 1) % 3])
 
 
+@pytest.mark.parametrize("stepper", ["exact", "fast"])
 @settings(max_examples=25, deadline=None)
 @given(colocated=st.booleans(),
        x=st.integers(min_value=1, max_value=3),
@@ -331,17 +332,18 @@ def _random_spec(colocated, x, y, medium_i, policy_i):
        rate=st.sampled_from([2.0, 10.0, 40.0]),
        seed=st.integers(min_value=0, max_value=2 ** 16))
 def test_fleet_serves_every_request_exactly_once(
-        colocated, x, y, medium_i, policy_i, arrival, rate, seed):
-    """For ANY fleet shape, router mix, arrival process, and seed:
-    every submitted request completes exactly once, is never served
-    before it arrives, and TTFT >= queue delay >= 0."""
+        stepper, colocated, x, y, medium_i, policy_i, arrival, rate, seed):
+    """For ANY fleet shape, router mix, arrival process, seed, AND
+    stepper: every submitted request completes exactly once, is never
+    served before it arrives, TTFT >= queue delay >= 0, no KV pages
+    leak, and the power-state timeline covers the whole run span."""
     spec = _random_spec(colocated, x, y, medium_i, policy_i)
     n = 7
     reqs = open_loop_workload(rate, n, arrival=arrival,
                               lengths=PaperFixedLengths(768, 6),
                               slo=SLO, seed=seed)
     cl = FleetCluster(spec, CFG)
-    cl.run(reqs)
+    cl.run(reqs, stepper=stepper)
     assert summarize(reqs).num_requests == n
     for r in reqs:
         assert r.done and r.generated == r.output_len      # exactly once
@@ -349,16 +351,25 @@ def test_fleet_serves_every_request_exactly_once(
         assert r.queue_s >= 0.0
         assert r.ttft_s >= r.queue_s >= 0.0
         assert r.finish_s >= r.first_token_s >= r.arrival_s
+    t_start = min(r.arrival_s for r in reqs)
+    t_end = max(r.finish_s for r in reqs)
+    trace = cl.meter.trace
+    assert trace is not None
     for e in cl.engines:
         e.pool.check_invariants()
         assert not e.pool.seqs, f"{e.name} leaked KV pages"
+        # fill_idle plugged every gap: the trace accounts for every
+        # second of [first arrival, last finish] on every accelerator
+        assert trace.covers(e.name, t_start, t_end), \
+            f"{e.name} trace has gaps under stepper={stepper}"
 
 
+@pytest.mark.parametrize("stepper", ["exact", "fast"])
 @settings(max_examples=10, deadline=None)
 @given(x=st.integers(min_value=1, max_value=2),
        y=st.integers(min_value=1, max_value=2),
        seed=st.integers(min_value=0, max_value=2 ** 16))
-def test_fleet_run_is_seed_deterministic(x, y, seed):
+def test_fleet_run_is_seed_deterministic(stepper, x, y, seed):
     """Same spec + same workload seed -> bit-identical results (the
     router tie-breaks come from the spec's seed, not global state)."""
     spec = FleetSpec.disaggregated(x, y, "ici")
@@ -366,7 +377,7 @@ def test_fleet_run_is_seed_deterministic(x, y, seed):
     def once():
         reqs = open_loop_workload(20.0, 8, lengths=PaperFixedLengths(512, 4),
                                   slo=SLO, seed=seed)
-        FleetCluster(spec, CFG).run(reqs)
+        FleetCluster(spec, CFG).run(reqs, stepper=stepper)
         return [(r.ttft_s, r.finish_s) for r in reqs]
 
     assert once() == once()
@@ -375,15 +386,17 @@ def test_fleet_run_is_seed_deterministic(x, y, seed):
 if not HAS_HYPOTHESIS:
     # keep a deterministic slice of the property coverage even without
     # the dev extra: one fixed example of the invariants above
-    def test_fleet_property_fixed_example():
+    @pytest.mark.parametrize("stepper", ["exact", "fast"])
+    def test_fleet_property_fixed_example(stepper):
         spec = FleetSpec.disaggregated(2, 2, "host")
         reqs = open_loop_workload(10.0, 7, arrival="gamma",
                                   lengths=PaperFixedLengths(768, 6),
                                   slo=SLO, seed=11)
         cl = FleetCluster(spec, CFG)
-        cl.run(reqs)
+        cl.run(reqs, stepper=stepper)
         for r in reqs:
             assert r.done and r.generated == r.output_len
             assert r.ttft_s >= r.queue_s >= 0.0
         for e in cl.engines:
             e.pool.check_invariants()
+            assert not e.pool.seqs, f"{e.name} leaked KV pages"

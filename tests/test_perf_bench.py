@@ -1,0 +1,58 @@
+"""Perf-marked acceptance tests for the simulator-core fast path.
+
+Excluded from the default pytest run (see pytest.ini addopts); CI's
+``perf`` lane runs them with ``-m perf``. Assertions are ratio-based —
+fast vs exact on the same machine in the same process — so they hold on
+slow CI boxes where absolute wall-clock would not.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(__file__)))
+
+from benchmarks import perf_bench  # noqa: E402
+
+pytestmark = pytest.mark.perf
+
+
+def test_fleet_scenario_speedup_meets_acceptance_bar():
+    """The PR's headline number: on the fleet-scale scenario the
+    coalescing stepper must be >=10x faster than the exact reference,
+    cold (cluster construction included), while executing exactly the
+    same number of engine steps."""
+    exact = perf_bench.time_scenario("fleet", "exact", reps=2)
+    fast = perf_bench.time_scenario("fleet", "fast", reps=2)
+    assert exact["engine_steps"] == fast["engine_steps"]
+    speedup = exact["wall_s"] / fast["wall_s"]
+    assert speedup >= 10.0, \
+        (f"fleet speedup {speedup:.1f}x < 10x "
+         f"(exact {exact['wall_s']*1e3:.1f}ms, "
+         f"fast {fast['wall_s']*1e3:.1f}ms)")
+
+
+def test_small_scenarios_never_slower():
+    """Coalescing must never lose: even the small single-engine scenario
+    (least steady-state decode to harvest) stays clearly ahead."""
+    for name in ("small", "medium"):
+        exact = perf_bench.time_scenario(name, "exact", reps=2)
+        fast = perf_bench.time_scenario(name, "fast", reps=2)
+        assert exact["wall_s"] / fast["wall_s"] >= 1.5, name
+
+
+def test_committed_baseline_is_well_formed():
+    """benchmarks/BENCH_simcore.json is a tracked artifact other tooling
+    (the CI --check gate) trusts: every scenario present, with both
+    stepper rows and a recorded speedup that itself clears the bar the
+    regression check defends."""
+    with open(perf_bench.BASELINE) as f:
+        base = json.load(f)
+    assert set(base["scenarios"]) == set(perf_bench.SCENARIOS)
+    for name, row in base["scenarios"].items():
+        for stepper in ("exact", "fast"):
+            assert row[stepper]["wall_s"] > 0
+            assert row[stepper]["engine_steps"] > 0
+        assert row["speedup"] > 1.0
+    assert base["scenarios"]["fleet"]["speedup"] >= 10.0
