@@ -9,6 +9,13 @@ through both steppers:
   fleet    8P:8D over ici under sustained load — the scale at which the
            exact per-token event loop became the bottleneck and the
            coalescing fast stepper (DESIGN.md section 13) earns its keep
+  fleet-adaptive
+           4P:4D with the adaptive fleet controller active — the bail
+           rule (DESIGN.md section 14) sends BOTH steppers through the
+           exact loop, so its speedup ratio is pinned near 1.0 and the
+           --check guard catches the bail rule silently disappearing
+           (a >1 ratio here would mean fast coalesced across controller
+           ticks, which is exactly the bug the rule forbids)
 
 The committed ``benchmarks/BENCH_simcore.json`` is the tracked baseline:
 re-run with ``--check`` to compare the CURRENT tree against it, failing
@@ -52,6 +59,10 @@ SCENARIOS: Dict[str, Tuple[FleetSpec, dict]] = {
     "fleet": (FleetSpec(n_prefill=8, n_decode=8, medium="ici"),
               dict(rate=12.0, n=256,
                    lengths=PaperFixedLengths(2048, 768), seed=0)),
+    "fleet-adaptive": (FleetSpec(n_prefill=4, n_decode=4, medium="ici",
+                                 controller="adaptive"),
+                       dict(rate=12.0, n=96,
+                            lengths=PaperFixedLengths(1024, 256), seed=0)),
 }
 
 

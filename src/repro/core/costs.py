@@ -38,6 +38,10 @@ class ChipSpec:
     # power model (200 W-class chip): static + dynamic at full utilization
     p_static_w: float = 65.0
     p_dyn_w: float = 135.0
+    # deep-sleep residual draw (rails down, HBM in self-refresh) — what a
+    # scale-to-zero fleet pays instead of p_static_w; waking costs the
+    # controller-configured wake latency, not extra energy beyond idle draw
+    p_sleep_w: float = 5.0
 
 
 @dataclass(frozen=True)
@@ -91,6 +95,10 @@ class AcceleratorSpec:
     @property
     def p_dyn_w(self) -> float:
         return self.chips * self.chip.p_dyn_w
+
+    @property
+    def p_sleep_w(self) -> float:
+        return self.chips * self.chip.p_sleep_w
 
 
 # frequency grid mirroring the paper's 0.36..1.26 GHz sweep of a 1.41 GHz
@@ -276,3 +284,7 @@ class CostModel:
 
     def idle_power_w(self) -> float:
         return self.acc.p_static_w
+
+    def sleep_power_w(self) -> float:
+        """Deep-sleep residual draw (fleet controller's scale-to-zero)."""
+        return self.acc.p_sleep_w

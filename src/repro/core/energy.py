@@ -52,11 +52,14 @@ class EnergyMeter:
         self.by_stage[stage] += joules
 
     def add_power(self, component: str, watts: float, seconds: float,
-                  stage: str = "other", t0: Optional[float] = None):
+                  stage: str = "other", t0: Optional[float] = None,
+                  state: Optional[str] = None):
         self.add(component, watts * seconds, stage)
         if self.trace is not None and t0 is not None:
+            if state is None:
+                state = IDLE if stage == "idle" else ACTIVE
             self.trace.record(component, t0, t0 + seconds, watts, stage,
-                              state=IDLE if stage == "idle" else ACTIVE)
+                              state=state)
 
     def add_power_run(self, component: str, watts: np.ndarray,
                       seconds: np.ndarray, stage: str,

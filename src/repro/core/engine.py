@@ -85,6 +85,15 @@ class Engine:
 
         self.t = 0.0                 # engine-local clock
         self.busy_s = 0.0
+        # fleet-controller lifecycle flags (repro.fleet.controller): a
+        # sleeping or draining engine stops ACCEPTING new routed work but
+        # keeps stepping what it already holds. Static fleets never
+        # clear this, so the flag is free for them.
+        self.accepting = True
+        # pages reserved on this engine by in-flight KV transfers (the
+        # kv-free-space router subtracts these; only decode-role engines
+        # accumulate them, but a flipped engine needs the attribute)
+        self.inflight_kv_pages = 0
         self.waiting: List[EngineSeq] = []       # priority-sorted
         self.prefilling: List[EngineSeq] = []    # priority-sorted
         self.running: List[EngineSeq] = []       # decode set

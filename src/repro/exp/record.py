@@ -77,6 +77,10 @@ class RunRecord:
     # goodput scoring: against the experiment's SLO when it has one,
     # else each request's own (absent targets pass — the t=0 batches)
     goodput: Optional[Dict[str, float]] = None
+    # fleet-controller activity (scale/flip/sleep ops logged during the
+    # run); additive with a default, so pre-controller cached records
+    # deserialize unchanged
+    controller_actions: int = 0
 
     # ------------------------------------------------------------------
     @property
@@ -127,6 +131,7 @@ class RunRecord:
     # ------------------------------------------------------------------
     @classmethod
     def from_result(cls, exp, result, *, governor_decisions: int = 0,
+                    controller_actions: int = 0,
                     requests: Optional[List] = None) -> "RunRecord":
         """Build the record from a finished ``SetupResult``; when the
         experiment carries an SLO the goodput block is scored with it
@@ -148,4 +153,5 @@ class RunRecord:
                    makespan_s=result.makespan_s,
                    total_tokens=result.total_tokens,
                    governor_decisions=governor_decisions,
+                   controller_actions=controller_actions,
                    goodput=goodput)

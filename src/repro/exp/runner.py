@@ -102,8 +102,10 @@ def simulate(exp: Experiment, *, executor_factory=None) -> RunRecord:
     result = cluster.run(reqs)
     decisions = sum(len(e.governor.decisions) for e in cluster.engines
                     if e.governor is not None)
+    actions = len(getattr(cluster, "controller_log", []) or [])
     return RunRecord.from_result(exp, result,
                                  governor_decisions=decisions,
+                                 controller_actions=actions,
                                  requests=reqs)
 
 

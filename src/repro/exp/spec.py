@@ -114,7 +114,14 @@ def decode_slo(d: Optional[Dict[str, Any]]) -> Optional[SLO]:
 
 
 def encode_fleet(spec: FleetSpec) -> Dict[str, Any]:
-    return _encode_fields(spec)
+    d = _encode_fields(spec)
+    if spec.controller is None:
+        # static fleets omit the key entirely: canonical JSON (hence
+        # every pre-controller spec hash and cached result) is unchanged
+        d.pop("controller")
+    else:
+        d["controller"] = _encode_fields(spec.controller)
+    return d
 
 
 def decode_fleet(d: Dict[str, Any]) -> FleetSpec:
@@ -372,6 +379,12 @@ class Experiment:
     def with_governor(self, governor) -> "Experiment":
         return replace(self, fleet=replace(self.fleet, governor=governor))
 
+    def with_controller(self, controller) -> "Experiment":
+        """Attach (or with None, detach) an online fleet controller —
+        a policy name, kwargs dict, or ``ControllerSpec``."""
+        return replace(self, fleet=replace(self.fleet,
+                                           controller=controller))
+
     def with_workload(self, **kw) -> "Experiment":
         return replace(self, workload=replace(self.workload, **kw))
 
@@ -438,6 +451,8 @@ def apply_spec_knobs(exp: "Experiment", kw: Dict[str, Any]):
         exp = exp.with_phi(**phi)
     if "governor" in kw:
         exp = exp.with_governor(kw.pop("governor"))
+    if "controller" in kw:
+        exp = exp.with_controller(kw.pop("controller"))
     return exp, kw
 
 

@@ -15,6 +15,10 @@ The legacy ``Cluster`` is a 1-2 instance facade over this subsystem.
 import repro.core  # noqa: F401  (import-order side effect only)
 
 from .cluster import FleetCluster, SetupResult
+from .controller import (CONTROLLERS, AdaptiveController, ControllerSpec,
+                         FleetController, NullController,
+                         ScheduleController, as_controller_spec,
+                         make_controller)
 from .router import (KVFreeSpace, LeastOutstandingTokens, MinEnergy,
                      POLICIES, Policy, RoundRobin, Router, make_policy)
 from .spec import (DIS_PATH, MEDIA, SETUPS, FleetSpec, as_fleet_spec,
@@ -26,4 +30,7 @@ __all__ = [
     "KVFreeSpace", "MinEnergy", "POLICIES", "make_policy",
     "FleetSpec", "as_fleet_spec", "setup_label",
     "SETUPS", "DIS_PATH", "MEDIA",
+    "ControllerSpec", "FleetController", "NullController",
+    "AdaptiveController", "ScheduleController", "CONTROLLERS",
+    "as_controller_spec", "make_controller",
 ]

@@ -31,10 +31,11 @@ from repro.core.engine import Engine, EngineSeq, RealExecutor
 from repro.core.fastpath import coalesce_window
 from repro.core.kvcache import PagedKVPool
 from repro.core.request import Request, WorkloadMetrics, summarize
-from repro.core.transfer import TransferPath, make_path
+from repro.core.transfer import LegCost, TransferPath, make_path
 from repro.govern import make_governor
-from repro.govern.telemetry import PowerTrace
+from repro.govern.telemetry import ABSENT, IDLE, SLEEP, PowerTrace
 
+from .controller import make_controller
 from .router import Router
 from .spec import FleetSpec, as_fleet_spec
 
@@ -166,23 +167,103 @@ class FleetCluster:
         self.path: Optional[TransferPath] = self.paths.get((0, 0)) \
             if len(self.paths) == 1 else None
 
-        self.frontend = Router(self.prefill_engines, spec.router, spec.seed)
-        self.kv_router = Router(self.decode_engines, spec.kv_router,
-                                spec.seed + 1) \
-            if self.decode_engines else None
+        # global engine index + pair paths keyed on it: role flips make
+        # (prefill_index, decode_index) ambiguous, so the transfer code
+        # looks paths up by (src.gidx, dst.gidx). Pre-populated with the
+        # SAME TransferPath objects as self.paths (which is kept for
+        # compatibility); pairs first connected after a flip get a
+        # fresh path of the spec's medium lazily.
+        for idx, e in enumerate(self.engines):
+            e.gidx = idx
+        x = spec.n_prefill
+        self._pair_paths: Dict[Tuple[int, int], TransferPath] = {
+            (i, x + j): p for (i, j), p in self.paths.items()}
+
+        # ---- online fleet controller (repro.fleet.controller) --------
+        # None = static fleet: every branch below is byte-for-byte the
+        # pre-controller behavior (accept=None routers, no lifecycle
+        # bookkeeping, no tick events).
+        self.controller = None
+        self.controller_log: List[dict] = []
+        self._lifecycle: Dict[str, List[Tuple[float, str]]] = {}
+        self._draining: Dict[Engine, str] = {}   # engine -> "sleep"|"flip"
+        self._parked_requests: List[Request] = []
+        self._parked_transfers: List[Tuple[Engine, EngineSeq, float]] = []
+        self._pending_arrivals = 0
+        if spec.controller is not None:
+            self.controller = make_controller(spec.controller,
+                                              seed=spec.seed + 2000)
+            for e in self.engines:
+                self._lifecycle[e.name] = [(0.0, "on")]
+            self._apply_initial_awake()
+
+        if self.controller is None:
+            accept_p = accept_d = None
+        elif spec.is_colocated:
+            accept_p = lambda e: e.accepting          # noqa: E731
+            accept_d = None
+        else:
+            # role-aware: a flipped engine moves between the two routers'
+            # eligible sets without rebinding the router itself
+            accept_p = lambda e: e.accepting and e.role != "decode"  # noqa: E731
+            accept_d = lambda e: e.accepting and e.role == "decode"  # noqa: E731
+        frontend_engines = self.prefill_engines if self.controller is None \
+            else self.engines
+        self.frontend = Router(frontend_engines, spec.router, spec.seed,
+                               accept=accept_p)
+        if not self.decode_engines:
+            self.kv_router = None
+        else:
+            kv_engines = self.decode_engines if self.controller is None \
+                else self.engines
+            self.kv_router = Router(kv_engines, spec.kv_router,
+                                    spec.seed + 1, accept=accept_d)
 
     # ------------------------------------------------------------------
     def _push(self, t: float, fn: Callable[[], None]) -> None:
         heapq.heappush(self._events, (t, next(self._counter), fn))
 
     # ------------------------------------------------------------------
+    def _pair_path(self, src: Engine, dst: Engine) -> TransferPath:
+        key = (src.gidx, dst.gidx)
+        path = self._pair_paths.get(key)
+        if path is None:                 # pair first connected post-flip
+            path = make_path(self.spec.medium, self.host)
+            self._pair_paths[key] = path
+        return path
+
     def _transfer(self, engine: Engine, seq: EngineSeq, t_done: float):
         """Store leg: runs right after prefill; pages stay held on the
         prefill accelerator until the store completes. The decode target
         is picked HERE (not at arrival), so the KV router sees decode
-        pool pressure at transfer time."""
+        pool pressure at transfer time. With a controller active the
+        pick can come up empty (every decode instance asleep/draining):
+        the handoff parks — pages still held, the backpressure is real —
+        until ``_provide`` wakes or flips capacity."""
         dec = self.kv_router.pick()
-        path = self.paths[(engine.fleet_index, dec.fleet_index)]
+        if dec is None:
+            self._parked_transfers.append((engine, seq, t_done))
+            self._provide("decode", t_done)
+            return
+        self._start_transfer(engine, seq, t_done, dec)
+
+    def _local_handoff(self, engine: Engine, seq: EngineSeq, t: float):
+        """A prefill->decode handoff whose target IS the engine that
+        prefilled it (possible only after a role flip): the KV is
+        already resident in its HBM, so both legs are zero-cost — the
+        pages are freed and immediately re-reserved under the decode
+        role's prompt+output reservation discipline."""
+        engine.pool.free_seq(seq.seq_id)
+        seq.req.transfer_done_s = t
+        engine.t = max(engine.t, t)
+        engine.enqueue_decode(seq, None, LegCost(0.0))
+
+    def _start_transfer(self, engine: Engine, seq: EngineSeq,
+                        t_done: float, dec: Engine):
+        if dec is engine:
+            self._local_handoff(engine, seq, t_done)
+            return
+        path = self._pair_path(engine, dec)
         nbytes = self.cost.kv_bytes(seq.ctx)
         store = path.store_cost(nbytes)
         fetch = path.fetch_cost(nbytes)
@@ -228,9 +309,280 @@ class FleetCluster:
         ``Engine.submit`` fast-forwards an idle engine's clock to the
         arrival instant; a busy engine (clock already past it) just
         queues the request."""
+        self._pending_arrivals += len(requests)
         for r in requests:
-            self._push(r.arrival_s,
-                       lambda r=r: self.frontend.pick().submit(r))
+            self._push(r.arrival_s, lambda r=r: self._on_arrival(r))
+
+    def _on_arrival(self, r: Request) -> None:
+        self._pending_arrivals -= 1
+        eng = self.frontend.pick()
+        if eng is None:     # controller-active and nothing accepting
+            self._parked_requests.append(r)
+            self._provide("prefill", r.arrival_s)
+            return
+        eng.submit(r)
+
+    # ------------------------------------------------------------------
+    # fleet-controller lifecycle machinery (DESIGN.md section 14).
+    # States per engine: on -> (drain ->) sleep -> wake -> on, plus
+    # absent (never provisioned yet; wakes like sleep at 0 W history).
+    # Invariants the primitives below maintain — the property tests in
+    # tests/test_controller.py fuzz them under random schedules:
+    #   * a sleeping/absent/waking/draining engine never ACCEPTS routed
+    #     work (routers filter on e.accepting + role);
+    #   * sleep requires a fully empty engine (quiescent, no pool seqs,
+    #     no in-flight KV), so no request is ever stranded;
+    #   * a drain completes only when the engine settles; drain-to-flip
+    #     of a prefill engine tolerates pool pages held by its own
+    #     PARKED handoffs (they become zero-cost local handoffs the
+    #     moment the engine is decode-role);
+    #   * every parked request/transfer triggers _provide(), which
+    #     always lines up future capacity for that role (wake, cancel a
+    #     drain, or flip the other role) — liveness.
+    # ------------------------------------------------------------------
+    def lifecycle_state(self, e: Engine) -> str:
+        if self.controller is None:
+            return "on"
+        return self._lifecycle[e.name][-1][1]
+
+    def _seg(self, e: Engine, t: float, state: str) -> None:
+        lc = self._lifecycle[e.name]
+        lc.append((max(t, lc[-1][0]), state))
+
+    def _log(self, t: float, op: str, e: Engine, **kw) -> None:
+        self.controller_log.append(
+            dict(t=round(float(t), 9), op=op, engine=e.name, **kw))
+
+    def _apply_initial_awake(self) -> None:
+        """Engines beyond the controller's initial_awake_* counts start
+        ABSENT (not provisioned): zero draw until first woken, never
+        back-filled as idle joules."""
+        cspec = self.controller.spec
+
+        def limit(engines, k):
+            if k is None or k < 0:
+                return
+            for e in engines[k:]:
+                e.accepting = False
+                self._lifecycle[e.name] = [(0.0, "absent")]
+
+        if self.spec.is_colocated:
+            limit(self.engines, cspec.initial_awake_prefill)
+        else:
+            limit(self.prefill_engines, cspec.initial_awake_prefill)
+            limit(self.decode_engines, cspec.initial_awake_decode)
+
+    # ---- controller-facing primitives --------------------------------
+    def ctl_wake(self, e: Engine, t: float) -> bool:
+        """sleep/absent -> wake -> (after wake_latency_s) on."""
+        if self.lifecycle_state(e) not in ("sleep", "absent"):
+            return False
+        t = max(t, e.t)
+        self._seg(e, t, "wake")
+        self._log(t, "wake", e)
+        t_ready = t + self.controller.spec.wake_latency_s
+
+        def ready(e=e, t_ready=t_ready):
+            self._seg(e, t_ready, "on")
+            e.accepting = True
+            e.t = max(e.t, t_ready)
+            self._rebalance(t_ready)
+
+        self._push(t_ready, ready)
+        return True
+
+    def ctl_sleep(self, e: Engine, t: float) -> bool:
+        """Deep-sleep an empty, settled engine immediately."""
+        if self.lifecycle_state(e) != "on" or e in self._draining:
+            return False
+        if not e._quiescent() or e.pool.seqs \
+                or getattr(e, "inflight_kv_pages", 0):
+            return False
+        e.accepting = False
+        t = max(t, e.t)
+        self._seg(e, t, "sleep")
+        self._log(t, "sleep", e)
+        return True
+
+    def ctl_drain(self, e: Engine, t: float, then: str = "sleep") -> bool:
+        """Stop accepting now; apply ``then`` ("sleep" or "flip") once
+        the engine settles."""
+        assert then in ("sleep", "flip"), then
+        if self.lifecycle_state(e) != "on" or e in self._draining:
+            return False
+        e.accepting = False
+        self._draining[e] = then
+        self._log(t, "drain", e, then=then)
+        self._check_drains(t)
+        return True
+
+    def ctl_cancel_drain(self, e: Engine, t: float) -> bool:
+        if e not in self._draining:
+            return False
+        del self._draining[e]
+        e.accepting = True
+        self._log(t, "cancel-drain", e)
+        return True
+
+    def ctl_flip_asleep(self, e: Engine, t: float) -> bool:
+        """Flip the role of a sleeping/absent (hence empty) engine in
+        place — repurposing a parked instance costs nothing."""
+        if self.lifecycle_state(e) not in ("sleep", "absent"):
+            return False
+        if e.pool.seqs or not e._quiescent():
+            return False
+        self._flip_role(e)
+        self._log(t, "flip", e, role=e.role, asleep=True)
+        return True
+
+    # ---- drain / flip internals --------------------------------------
+    def _flip_role(self, e: Engine) -> None:
+        e.role = "decode" if e.role == "prefill" else "prefill"
+        e.on_prefill_done = self._transfer
+        e._fastrun = None    # cached steady-state run keyed on old role
+
+    def _drained(self, e: Engine, fate: str) -> bool:
+        if not e._quiescent() or getattr(e, "inflight_kv_pages", 0):
+            return False
+        if not e.pool.seqs:
+            return True
+        if fate == "flip" and e.role == "prefill":
+            # pages held only by this engine's own parked handoffs:
+            # they self-deliver locally the moment the role flips
+            parked_here = {s.seq_id for (src, s, _)
+                           in self._parked_transfers if src is e}
+            return set(e.pool.seqs) <= parked_here
+        return False
+
+    def _check_drains(self, t: float) -> bool:
+        done = [e for e, fate in self._draining.items()
+                if self._drained(e, fate)]
+        for e in done:
+            fate = self._draining.pop(e)
+            tt = max(t, e.t)
+            if fate == "sleep":
+                self._seg(e, tt, "sleep")
+                self._log(tt, "sleep", e)
+            else:
+                self._apply_flip(e, tt)
+        if done:
+            self._rebalance(t)
+        return bool(done)
+
+    def _apply_flip(self, e: Engine, t: float) -> None:
+        self._flip_role(e)
+        e.accepting = True
+        e.t = max(e.t, t)
+        self._log(t, "flip", e, role=e.role)
+        if e.role == "decode":
+            mine = [item for item in self._parked_transfers
+                    if item[0] is e]
+            for item in mine:
+                self._parked_transfers.remove(item)
+                _, seq, td = item
+                self._local_handoff(e, seq, max(td, t))
+
+    # ---- parked-work liveness ----------------------------------------
+    def _flush(self, t: float) -> None:
+        """Re-route parked requests/handoffs against current capacity."""
+        still_r: List[Request] = []
+        for r in self._parked_requests:
+            eng = self.frontend.pick()
+            if eng is None:
+                still_r.append(r)
+            else:
+                eng.submit(r)
+        self._parked_requests = still_r
+        still_t: List[Tuple[Engine, EngineSeq, float]] = []
+        for (src, seq, td) in self._parked_transfers:
+            dec = self.kv_router.pick()
+            if dec is None:
+                still_t.append((src, seq, td))
+            else:
+                self._start_transfer(src, seq, max(td, t), dec)
+        self._parked_transfers = still_t
+
+    def _rebalance(self, t: float) -> None:
+        if self.controller is None:
+            return
+        self._flush(t)
+        if self._parked_requests:
+            self._provide("prefill", t)
+        if self._parked_transfers:
+            self._provide("decode", t)
+
+    def _provide(self, role: str, t: float) -> None:
+        """Guarantee future capacity for ``role``. Tried in order:
+        capacity already coming (accepting / waking / a pending flip),
+        cancel a same-role drain, wake a sleeping same-role instance,
+        repurpose the OTHER role (flip a sleeping one, retarget a
+        drain-to-sleep, or drain-to-flip the least-loaded accepting
+        one). Finite work + this chain being re-run at every settle
+        point is the liveness argument: parked work always has capacity
+        on the way."""
+        if self.controller is None:
+            return
+
+        def has_role(e):
+            if self.spec.is_colocated:
+                return True
+            want_decode = role == "decode"
+            return (e.role == "decode") == want_decode
+
+        same = [e for e in self.engines if has_role(e)]
+        other = [e for e in self.engines if not has_role(e)]
+        for e in same:
+            if e.accepting or self.lifecycle_state(e) == "wake":
+                return
+        for e in same:
+            if e in self._draining:
+                self.ctl_cancel_drain(e, t)
+                self._flush(t)
+                return
+        for e in same:
+            if self.lifecycle_state(e) in ("sleep", "absent"):
+                self.ctl_wake(e, t)
+                return
+        for e in other:
+            if self._draining.get(e) == "flip":
+                return
+        for e in other:
+            if self.lifecycle_state(e) in ("sleep", "absent") \
+                    and not e.pool.seqs and e._quiescent():
+                if self.ctl_flip_asleep(e, t):
+                    self.ctl_wake(e, t)
+                    return
+        for e in other:
+            if self._draining.get(e) == "sleep":
+                self._draining[e] = "flip"
+                self._log(t, "retarget-flip", e)
+                self._check_drains(t)
+                return
+        cands = [e for e in other
+                 if e.accepting and e not in self._draining]
+        if cands:
+            victim = min(cands,
+                         key=lambda e: (e.outstanding_tokens(), e.gidx))
+            self.ctl_drain(victim, t, then="flip")
+
+    # ---- controller tick scheduling ----------------------------------
+    def _work_pending(self) -> bool:
+        if self._pending_arrivals or self._parked_requests \
+                or self._parked_transfers:
+            return True
+        return any(not e._quiescent() or e.pool.seqs
+                   or getattr(e, "inflight_kv_pages", 0)
+                   for e in self.engines)
+
+    def _schedule_tick(self, t: float) -> None:
+        def tick(t=t):
+            self.controller.on_tick(self, t)
+            self._check_drains(t)
+            self._rebalance(t)
+            if self._work_pending():
+                self._schedule_tick(t + self.controller.spec.interval_s)
+
+        self._push(t, tick)
 
     # ------------------------------------------------------------------
     def _run_loop(self, max_steps: int, fast: bool) -> int:
@@ -264,7 +616,12 @@ class FleetCluster:
                 if fast and coalesce_window(candidates, order,
                                             t_next_event):
                     continue
-                if not eng.step():
+                if eng.step():
+                    # a settling engine may complete a pending drain
+                    # (sleep or flip), which can free parked work
+                    if self._draining and self._check_drains(eng.t):
+                        stalled.clear()
+                else:
                     # no progress (e.g. pool blocked by in-flight stores):
                     # park until the next event frees resources
                     stalled.add(eng)
@@ -278,12 +635,42 @@ class FleetCluster:
         return steps
 
     # ------------------------------------------------------------------
+    def _power_segments(self, e: Engine, t_start: float, t_end: float
+                        ) -> Optional[List[Tuple[float, float, str]]]:
+        """Lifecycle segments of [t_start, t_end] for end-of-run power
+        attribution, or None for an engine that was simply ON the whole
+        run — in which case run() takes the legacy makespan-minus-busy
+        branch VERBATIM, keeping static fleets (and the no-op
+        controller) bit-identical to pre-controller accounting."""
+        lc = self._lifecycle.get(e.name) if self.controller is not None \
+            else None
+        if lc is None or (len(lc) == 1 and lc[0][1] == "on"):
+            return None
+        out: List[Tuple[float, float, str]] = []
+        for i, (t0, state) in enumerate(lc):
+            t1 = lc[i + 1][0] if i + 1 < len(lc) else t_end
+            s0, s1 = max(t0, t_start), min(t1, t_end)
+            if s1 > s0:
+                out.append((s0, s1, state))
+        return out
+
+    # ------------------------------------------------------------------
     def run(self, requests: List[Request], max_steps: int = 2_000_000,
             stepper: Optional[str] = None) -> SetupResult:
         stepper = stepper or DEFAULT_STEPPER
         assert stepper in STEPPERS, stepper
+        # the bail rule (DESIGN.md section 14): coalescing across a
+        # controller's tick events would let fleet state change inside
+        # a vectorized window, so controller-active runs take the exact
+        # stepper unless the controller declares itself coalescible-
+        # quiescent (only the no-op NullController does). Both steppers
+        # therefore remain observably identical for every spec.
+        fast = stepper == "fast" and (self.controller is None
+                                      or self.controller.coalescible)
         self.submit(requests)
-        steps = self._run_loop(max_steps, fast=(stepper == "fast"))
+        if self.controller is not None and self.controller.wants_ticks:
+            self._schedule_tick(self.controller.spec.interval_s)
+        steps = self._run_loop(max_steps, fast=fast)
 
         unfinished = [r for r in requests if not r.done]
         assert not unfinished, (
@@ -297,15 +684,41 @@ class FleetCluster:
         # joule lump keeps the exact pre-trace arithmetic (parity
         # goldens), while fill_idle writes the same idle power into the
         # timeline gap-by-gap so each accelerator's power-state trace
-        # covers the whole run span
+        # covers the whole run span. An engine whose lifecycle left the
+        # always-on state instead pays segment-by-segment: idle draw
+        # only while ON, idle draw (stage "wake") while waking, the
+        # sleep residual while ASLEEP, and nothing while ABSENT — the
+        # honest attribution that lets scale-to-zero attack the floor.
         trace = self.meter.trace
         for e in self.engines:
-            idle_s = max(makespan - e.busy_s, 0.0)
-            self.meter.add_power(e.name, self.cost.idle_power_w(), idle_s,
-                                 stage="idle")
-            if trace is not None:
-                trace.fill_idle(e.name, t_start, t_end,
-                                self.cost.idle_power_w())
+            segs = self._power_segments(e, t_start, t_end)
+            if segs is None:
+                idle_s = max(makespan - e.busy_s, 0.0)
+                self.meter.add_power(e.name, self.cost.idle_power_w(),
+                                     idle_s, stage="idle")
+                if trace is not None:
+                    trace.fill_idle(e.name, t_start, t_end,
+                                    self.cost.idle_power_w())
+                continue
+            for s0, s1, state in segs:
+                if state == "on":
+                    filled = trace.fill_idle(e.name, s0, s1,
+                                             self.cost.idle_power_w())
+                    self.meter.add(e.name,
+                                   self.cost.idle_power_w() * filled,
+                                   stage="idle")
+                elif state == "wake":
+                    self.meter.add_power(e.name, self.cost.idle_power_w(),
+                                         s1 - s0, stage="wake", t0=s0,
+                                         state=IDLE)
+                elif state == "sleep":
+                    self.meter.add_power(e.name, self.cost.sleep_power_w(),
+                                         s1 - s0, stage="sleep", t0=s0,
+                                         state=SLEEP)
+                else:   # absent: 0 W, explicit interval (never idle-filled)
+                    self.meter.add_power(e.name, 0.0, s1 - s0,
+                                         stage="absent", t0=s0,
+                                         state=ABSENT)
         # host-node baseline draw (IPMI-style whole-node accounting)
         self.meter.add_power("cpu", self.host.cpu_idle_w, makespan, "idle",
                              t0=t_start)

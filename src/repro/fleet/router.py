@@ -38,7 +38,7 @@ same tie-break sequence, bit-identical metrics.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -152,17 +152,35 @@ def make_policy(name: str) -> Policy:
 
 class Router:
     """One routing decision point: a policy bound to its target engines
-    and a seeded tie-break stream."""
+    and a seeded tie-break stream.
+
+    ``accept`` (installed only by controller-active fleets) filters the
+    candidate set per pick so routing never sees a sleeping, draining,
+    or wrong-role instance; ``pick`` returns None when nothing is
+    eligible and the cluster parks the work. When every engine is
+    eligible the filtered list is the full list — identical contents
+    and order, so policy state and tie-break rng draws match the
+    static (accept=None) path bit-for-bit.
+    """
 
     def __init__(self, engines: Sequence[Engine],
-                 policy: str = "least-outstanding-tokens", seed: int = 0):
+                 policy: str = "least-outstanding-tokens", seed: int = 0,
+                 accept: Optional[Callable[[Engine], bool]] = None):
         if not engines:
             raise ValueError("router needs >= 1 target engine")
         self.engines: List[Engine] = list(engines)
         self.policy = make_policy(policy)
         self._rng = np.random.default_rng(seed)
+        self.accept = accept
 
-    def pick(self) -> Engine:
-        if len(self.engines) == 1:       # the 1P:1D / co-1gpu fast path
-            return self.engines[0]
-        return self.policy.select(self.engines, self._rng)
+    def pick(self) -> Optional[Engine]:
+        if self.accept is None:
+            if len(self.engines) == 1:   # the 1P:1D / co-1gpu fast path
+                return self.engines[0]
+            return self.policy.select(self.engines, self._rng)
+        cands = [e for e in self.engines if self.accept(e)]
+        if not cands:
+            return None
+        if len(cands) == 1:
+            return cands[0]
+        return self.policy.select(cands, self._rng)

@@ -30,6 +30,8 @@ import re
 from dataclasses import dataclass, replace
 from typing import Optional, Tuple, Union
 
+from .controller import ControllerSpec, as_controller_spec
+
 # mirrors repro.core.orchestrator (defined here to keep the import
 # direction fleet <- core.orchestrator acyclic; orchestrator re-exports)
 SETUPS = ("co-1gpu", "co-2gpus", "dis-ici", "dis-host", "dis-disk")
@@ -80,6 +82,12 @@ class FleetSpec:
     # (prefill instances first, then decode). "static" keeps the
     # configured phi — bit-identical to pre-governor behavior.
     governor: Union[str, Tuple[str, ...]] = "static"
+    # online fleet controller (repro.fleet.controller): autoscaling,
+    # P<->D role-flipping, scale-to-zero. None = a static fleet (the
+    # pre-controller code path, byte-for-byte — spec encodings omit the
+    # key entirely so every existing exp-cache hash is preserved).
+    # Accepts a policy name, a ControllerSpec, or a kwargs dict.
+    controller: Optional[Union[str, dict, ControllerSpec]] = None
 
     # ------------------------------------------------------------------
     def __post_init__(self):
@@ -109,6 +117,9 @@ class FleetSpec:
         if not isinstance(self.governor, str):
             object.__setattr__(self, "governor",
                                tuple(str(g) for g in self.governor))
+        if self.controller is not None:
+            object.__setattr__(self, "controller",
+                               as_controller_spec(self.controller))
         # broadcast now so a malformed tuple fails at spec construction
         self.phis_prefill
         self.phis_decode

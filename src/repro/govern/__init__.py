@@ -21,10 +21,10 @@ nothing in this package may import ``repro.core`` at module level
 from .governors import (GOVERNORS, Governor, GovernorDecision,
                         QueueDepthGovernor, SLOSlackGovernor,
                         StaticGovernor, make_governor)
-from .telemetry import ACTIVE, IDLE, PowerSample, PowerTrace
+from .telemetry import ABSENT, ACTIVE, IDLE, SLEEP, PowerSample, PowerTrace
 
 __all__ = [
-    "PowerTrace", "PowerSample", "ACTIVE", "IDLE",
+    "PowerTrace", "PowerSample", "ACTIVE", "IDLE", "SLEEP", "ABSENT",
     "Governor", "GovernorDecision", "StaticGovernor",
     "QueueDepthGovernor", "SLOSlackGovernor", "GOVERNORS",
     "make_governor",

@@ -24,6 +24,12 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 ACTIVE, IDLE = "active", "idle"
+# Deep-sleep (powered down to a residual draw, wake costs latency) and
+# absent (instance not part of the fleet over that interval — scaled in
+# late or never provisioned). fill_idle must NEVER back-fill these
+# windows with idle joules; the fleet controller records them
+# explicitly so state_summary() attributes the floor honestly.
+SLEEP, ABSENT = "sleep", "absent"
 
 
 @dataclass(frozen=True)
@@ -272,14 +278,21 @@ class PowerTrace:
 
     # ------------------------------------------------------------------
     def state_summary(self) -> Dict[str, Dict[str, float]]:
-        """{component: {"active_j", "idle_j", "active_s", "idle_s"}} —
-        the idle-floor table fig8 and the energy report print."""
+        """{component: {"active_j", "idle_j", "sleep_j", "absent_j",
+        "active_s", ...}} — the idle-floor table fig8 and the energy
+        report print. Buckets by the sample's ACTUAL state: before the
+        fleet controller existed every non-active sample was counted as
+        idle, silently back-filling deep-sleep / not-yet-provisioned
+        windows into the idle-energy floor. States outside the standard
+        four get their own keys."""
         out: Dict[str, Dict[str, float]] = {}
         for c in self.components:
-            row = {"active_j": 0.0, "idle_j": 0.0,
-                   "active_s": 0.0, "idle_s": 0.0}
+            row = {f"{k}_{u}": 0.0
+                   for k in (ACTIVE, IDLE, SLEEP, ABSENT) for u in "js"}
             for chunk in self._chunks[c]:
-                key = "active" if chunk.state == ACTIVE else "idle"
+                key = chunk.state
+                row.setdefault(f"{key}_j", 0.0)
+                row.setdefault(f"{key}_s", 0.0)
                 if isinstance(chunk, _RunBlock):
                     row[f"{key}_j"] += float(np.dot(
                         chunk.watts, chunk.t1s - chunk.t0s))

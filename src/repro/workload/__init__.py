@@ -9,8 +9,8 @@ of the five setups, score it with DistServe-style SLO goodput, and
 locate the crossover load with ``crossover_rate`` / ``max_goodput_rate``.
 """
 from .arrivals import (ArrivalProcess, DeterministicArrivals,
-                       GammaArrivals, PoissonArrivals, RampArrivals,
-                       make_arrivals)
+                       DiurnalArrivals, GammaArrivals, PoissonArrivals,
+                       RampArrivals, make_arrivals)
 from .goodput import (DEFAULT_INTERACTIVE_SLO, GoodputReport, evaluate,
                       max_goodput_rate)
 from .lengths import (ChatbotLengths, LengthMix, MixtureLengths,
@@ -22,7 +22,7 @@ from .sweep import (Crossover, RatePoint, crossover_rate, goodput_gap,
 
 __all__ = [
     "ArrivalProcess", "PoissonArrivals", "GammaArrivals", "RampArrivals",
-    "DeterministicArrivals", "make_arrivals",
+    "DiurnalArrivals", "DeterministicArrivals", "make_arrivals",
     "LengthMix", "PaperFixedLengths", "ShareGPTLengths", "ChatbotLengths",
     "RAGSharedPrefixLengths", "MixtureLengths", "ReqShape", "make_lengths",
     "WorkloadSpec", "open_loop_workload",

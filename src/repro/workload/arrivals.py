@@ -112,6 +112,55 @@ class RampArrivals(ArrivalProcess):
 
 
 @dataclass(frozen=True)
+class DiurnalArrivals(ArrivalProcess):
+    """Non-homogeneous Poisson diurnal cycle: instantaneous rate
+
+        r(t) = rate * (floor + (1 - floor) * (1 - cos(2 pi t/period)) / 2)
+
+    — a raised-cosine day/night swing between ``rate * floor`` (trough)
+    and ``rate`` (peak), period ``period_s``. This is the traffic shape
+    autoscaling papers (P/D-Serve, DualScale) target: long low-rate
+    valleys where a static fleet burns its idle floor and an adaptive
+    one sleeps. Sampled exactly like ``RampArrivals``: unit-exponential
+    targets inverted against the closed-form cumulative intensity
+
+        Lambda(t) = rate * (floor t + (1-floor)(t - (p/2pi) sin(2pi t/p))/2)
+
+    by bisection (Lambda is strictly increasing; r(t) >= rate*floor > 0
+    bounds the bracket), so the draw count is n regardless of rates."""
+    rate: float                 # peak rate, req/s
+    period_s: float = 60.0
+    floor: float = 0.1          # trough fraction of peak, in (0, 1]
+
+    def _cum(self, t: np.ndarray) -> np.ndarray:
+        p, f = self.period_s, self.floor
+        w = 2.0 * np.pi / p
+        return self.rate * (f * t + (1.0 - f) * 0.5
+                            * (t - np.sin(w * t) / w))
+
+    def times(self, n: int, seed: int = 0) -> np.ndarray:
+        assert self.rate > 0 and self.period_s > 0 and 0 < self.floor <= 1
+        rng = np.random.default_rng(seed)
+        targets = np.cumsum(rng.exponential(1.0, size=n))
+        rate_min = self.rate * self.floor
+        lo = np.zeros(n)
+        hi = targets / rate_min + 1.0      # Lambda(hi) >= targets always
+        for _ in range(200):               # bisection to float64 limits
+            mid = 0.5 * (lo + hi)
+            below = self._cum(mid) < targets
+            lo = np.where(below, mid, lo)
+            hi = np.where(below, hi, mid)
+            if np.all(hi - lo <= 1e-12 * np.maximum(hi, 1.0)):
+                break
+        return self._finalize(np.maximum.accumulate(0.5 * (lo + hi)))
+
+    @property
+    def nominal_rate(self) -> float:
+        """Long-run average rate (the mean of the raised cosine)."""
+        return self.rate * (1.0 + self.floor) / 2.0
+
+
+@dataclass(frozen=True)
 class DeterministicArrivals(ArrivalProcess):
     """Fixed inter-arrival interval 1/rate (the closed-form staggered
     schedule; seed is accepted for interface uniformity and ignored)."""
@@ -132,6 +181,7 @@ _ARRIVALS = {
     "poisson": PoissonArrivals,
     "gamma": GammaArrivals,
     "ramp": RampArrivals,
+    "diurnal": DiurnalArrivals,
     "deterministic": DeterministicArrivals,
 }
 

@@ -105,6 +105,21 @@ GRID = [
     (FleetSpec(n_colocated=1),
      dict(rate=16.0, n=12, lengths=PaperFixedLengths(8192, 256),
           seed=5)),
+    # fleet controllers (DESIGN.md section 14): the no-op controller is
+    # coalescible, so the fast stepper keeps vectorizing and must still
+    # match exact; active controllers make fast bail to exact — parity
+    # must hold either way (that IS the bail rule's contract)
+    (FleetSpec(n_prefill=2, n_decode=2, medium="ici", controller="null"),
+     dict(rate=8.0, n=14, lengths=PaperFixedLengths(2048, 64), seed=6)),
+    (FleetSpec(n_prefill=2, n_decode=2, medium="ici",
+               controller="adaptive"),
+     dict(rate=6.0, n=12, lengths=PaperFixedLengths(1024, 128),
+          slo=DEFAULT_INTERACTIVE_SLO, seed=7)),
+    (FleetSpec(n_colocated=2, controller="schedule"),
+     dict(rate=8.0, n=12, lengths=PaperFixedLengths(2048, 32), seed=8)),
+    (FleetSpec(n_prefill=1, n_decode=2, medium="host",
+               controller="schedule", governor="queue-depth"),
+     dict(rate=4.0, n=10, lengths=PaperFixedLengths(2048, 64), seed=9)),
 ]
 
 
@@ -129,21 +144,26 @@ GOVERNORS = ("static", "queue-depth", "slo-slack")
 ROUTERS = ("round-robin", "least-outstanding-tokens")
 KV_ROUTERS = ("kv-free-space", "least-outstanding-tokens")
 ARRIVALS = ("poisson", "gamma")
+# the controller axis: none / static-equivalent no-op / active
+CONTROLLERS = (None, "null", "schedule", "adaptive")
 
 N_EXAMPLES = int(os.environ.get("REPRO_PARITY_EXAMPLES", "20"))
 
 
 def _spec_strategy():
     colocated = st.builds(
-        lambda n, gov: FleetSpec(n_colocated=n, governor=gov),
-        st.integers(1, 2), st.sampled_from(GOVERNORS))
+        lambda n, gov, ctl: FleetSpec(n_colocated=n, governor=gov,
+                                      controller=ctl),
+        st.integers(1, 2), st.sampled_from(GOVERNORS),
+        st.sampled_from(CONTROLLERS))
     disagg = st.builds(
-        lambda p, d, m, r, kr, gov, phi_p, phi_d: FleetSpec(
+        lambda p, d, m, r, kr, gov, ctl, phi_p, phi_d: FleetSpec(
             n_prefill=p, n_decode=d, medium=m, router=r, kv_router=kr,
-            governor=gov, phi_prefill=phi_p, phi_decode=phi_d),
+            governor=gov, controller=ctl, phi_prefill=phi_p,
+            phi_decode=phi_d),
         st.integers(1, 3), st.integers(1, 3), st.sampled_from(MEDIA),
         st.sampled_from(ROUTERS), st.sampled_from(KV_ROUTERS),
-        st.sampled_from(GOVERNORS),
+        st.sampled_from(GOVERNORS), st.sampled_from(CONTROLLERS),
         st.sampled_from((0.6, 0.8, 1.0)), st.sampled_from((0.7, 1.0)))
     return st.one_of(colocated, disagg)
 
