@@ -1,0 +1,279 @@
+"""Fig 10 (new): shared-prefix KV reuse vs the fig6 crossover and the
+idle-power energy gap.
+
+Fig 6 located the load crossover where disaggregation starts beating
+colocation on SLO goodput; fig 9 attacked the below-crossover energy gap
+with sleep states. This figure asks what *KV reuse* does to both, under
+the workload reuse actually targets: RAG-style requests sharing a long
+document prefix (``RAGSharedPrefixLengths``). The grid is rate x reuse
+mode (none / flat prefix cache / tiered prefix / tiered PIC) x tier
+budget (``repro.kvstore.TierSpec``) x setup, with reuse fleets routed by
+``prefix-affinity`` so requests land where their prefix is resident.
+Tiered cells price every cross-tier page movement through the same
+PCIe/DRAM/NVMe paths as the paper's transfer study — the ``tier-fetch``
+/ ``tier-spill`` columns are those joules.
+
+Machine-checked claims (asserted here and by CI on the smoke JSON):
+  (a) reuse ENGAGES: every reuse cell reports ``reused_tok > 0``, and
+      every tiered cell meters nonzero tier-spill joules;
+  (b) reuse cuts prefill-stage joules vs the none cell at the same
+      (setup, rate) — skipped prefill work is skipped energy;
+  (c) whether reuse SHIFTS the fig6 goodput crossover is the headline
+      question: ``crossovers`` holds the bisected crossover rate per
+      reuse config and ``crossover_shift`` the delta vs none. Either
+      direction (or "still no crossover") is reported — reuse relieves
+      the prefill stage, which helps the colocated baseline too;
+  (d) whether reuse DENTS the below-crossover energy gap:
+      ``gap_dent_at`` compares (dis_total_j - co_total_j) with and
+      without reuse at each rate; a negative ``dent_j`` means reuse
+      narrowed the gap the idle floor opened.
+
+  python -m benchmarks.fig10_reuse_crossover            # full grid
+  python -m benchmarks.fig10_reuse_crossover --smoke    # CI: tiny + JSON
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.core import SLO
+from repro.exp import Experiment, ReuseSpec, TierSpec
+from repro.exp import run as run_exp
+from repro.workload import DEFAULT_INTERACTIVE_SLO, RAGSharedPrefixLengths
+
+from . import common
+
+DEFAULT_SLO = DEFAULT_INTERACTIVE_SLO
+CO_SETUP, DIS_SETUPS = "co-2gpus", ("dis-ici", "dis-host")
+# RAG shape: a shared document prefix plus a unique per-request tail —
+# the workload whose prefill the paper's 16k analysis shape stresses,
+# scaled to open-loop interactive rates
+PREFIX_LEN, VOCAB = 2048, 512
+PAGE = 16
+
+# tier budgets in pages-of-16-tokens: "small" forces constant demotion
+# traffic (HBM holds ~1/2 of one shared prefix), "large" keeps the
+# working set HBM-resident after warmup
+TIERS_SMALL = TierSpec(hbm_pages=64, dram_pages=256, disk_pages=1024)
+TIERS_LARGE = TierSpec(hbm_pages=1024, dram_pages=4096, disk_pages=0)
+
+# reuse configs: label -> (ReuseSpec | None). Reuse fleets route with
+# prefix-affinity; the none fleet keeps the default router (on a cold
+# fleet prefix-affinity IS least-outstanding-tokens byte-for-byte —
+# tests/test_kvstore.py — so the comparison isolates reuse itself).
+REUSE_CFGS = {
+    "none": None,
+    "prefix-flat": ReuseSpec(mode="prefix", page_size=PAGE),
+    "prefix-tier-s": ReuseSpec(mode="prefix", page_size=PAGE,
+                               tiers=TIERS_SMALL),
+    "prefix-tier-l": ReuseSpec(mode="prefix", page_size=PAGE,
+                               tiers=TIERS_LARGE),
+    "pic-tier-s": ReuseSpec(mode="pic", page_size=PAGE,
+                            tiers=TIERS_SMALL),
+}
+
+HEADER = ["setup", "rate_rps", "reuse", "attainment", "goodput_rps",
+          "reused_tok", "prefill_j", "tier_fetch_j", "tier_spill_j",
+          "idle_j", "total_j", "j_per_token"]
+
+
+def _exp(setup, rate, reuse_name, *, arch, n, seed, slo):
+    exp = Experiment.open(setup, rate, arch=arch, n=n, seed=seed, slo=slo,
+                          lengths=RAGSharedPrefixLengths(
+                              prefix_len=PREFIX_LEN),
+                          vocab_size=VOCAB)
+    reuse = REUSE_CFGS[reuse_name]
+    if reuse is not None:
+        # fleet-level: per-engine tiered stores + locality-aware routing
+        exp = replace(exp, fleet=replace(exp.fleet, reuse=reuse,
+                                         router="prefix-affinity"))
+    return exp
+
+
+def _cell(setup, rate, reuse_name, **kw):
+    rec = run_exp(_exp(setup, rate, reuse_name, **kw))
+    st = rec.energy_by_stage
+    return {
+        "setup": setup, "rate_rps": rate, "reuse": reuse_name,
+        "attainment": round(rec.attainment, 4),
+        "goodput_rps": round(rec.goodput_rps, 4),
+        "reused_tok": rec.metrics.total_reused_tokens,
+        "prefill_j": round(st.get("prefill", 0.0), 2),
+        "tier_fetch_j": round(st.get("tier-fetch", 0.0), 4),
+        "tier_spill_j": round(st.get("tier-spill", 0.0), 4),
+        "idle_j": round(rec.idle_j, 2),
+        "total_j": round(rec.total_j, 2),
+        "j_per_token": round(rec.joules_per_token, 4),
+    }
+
+
+def _crossover(dis, reuse_name, lo, hi, gp, *, iters):
+    """Bisect the rate where ``dis`` goodput overtakes the colocated
+    baseline under one reuse config (both sides get the same config —
+    the question is what reuse does to the *crossover*, not a reuse
+    fleet vs a bare one). None when the sign never changes in [lo, hi]."""
+    def diff(rate):
+        return gp(dis, rate) - gp(CO_SETUP, rate)
+    d_lo, d_hi = diff(lo), diff(hi)
+    if d_lo == 0 and d_hi == 0:
+        return None
+    if (d_lo >= 0) == (d_hi >= 0):
+        return None
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if (diff(mid) >= 0) == (d_lo >= 0):
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def run(arch: str = common.DEFAULT_ARCH, *, rates=None, n: int = None,
+        slo: SLO = DEFAULT_SLO, smoke: bool = False, seed: int = 0,
+        out: str = None):
+    if rates is None:
+        rates = (2.0, 6.0) if smoke else (1.0, 2.0, 4.0, 8.0, 16.0)
+    if n is None:
+        n = 20 if smoke else 120
+    dis_setups = DIS_SETUPS[:1] if smoke else DIS_SETUPS
+    reuse_names = (("none", "prefix-flat", "prefix-tier-s") if smoke
+                   else tuple(REUSE_CFGS))
+    kw = dict(arch=arch, n=n, seed=seed, slo=slo)
+
+    records = []
+    for setup in (CO_SETUP,) + dis_setups:
+        for rate in rates:
+            for reuse_name in reuse_names:
+                records.append(_cell(setup, rate, reuse_name, **kw))
+
+    rows = [[r[k] for k in HEADER] for r in records]
+    common.print_table("Fig 10: KV reuse vs crossover + energy gap",
+                       HEADER, rows)
+    common.write_csv("fig10_reuse_crossover.csv", HEADER, rows)
+
+    def cell(setup, rate, reuse_name):
+        for r in records:
+            if (r["setup"], r["rate_rps"], r["reuse"]) == \
+                    (setup, rate, reuse_name):
+                return r
+        return None
+
+    # (a) reuse engages -------------------------------------------------
+    for r in records:
+        if r["reuse"] != "none":
+            assert r["reused_tok"] > 0, \
+                f"reuse never engaged in {r['setup']}@{r['rate_rps']}" \
+                f"/{r['reuse']}"
+        if "tier" in r["reuse"]:
+            assert r["tier_spill_j"] > 0, \
+                f"tiered cell metered no spill joules: {r}"
+
+    # (b) reuse cuts prefill-stage joules at fixed (setup, rate) --------
+    for setup in (CO_SETUP,) + dis_setups:
+        for rate in rates:
+            base = cell(setup, rate, "none")
+            for reuse_name in reuse_names:
+                if reuse_name == "none":
+                    continue
+                r = cell(setup, rate, reuse_name)
+                assert r["prefill_j"] < base["prefill_j"], \
+                    (f"{reuse_name} did not cut prefill joules at "
+                     f"{setup}@{rate}: {r['prefill_j']} vs "
+                     f"{base['prefill_j']}")
+
+    # (c) the crossover, per reuse config -------------------------------
+    lo, hi = min(rates), max(rates)
+    iters = 2 if smoke else 5
+    gp_cache = {(r["setup"], r["rate_rps"], r["reuse"]): r["goodput_rps"]
+                for r in records}
+    crossovers = {}
+    for reuse_name in reuse_names:
+        def gp(setup, rate, _rn=reuse_name):
+            key = (setup, rate, _rn)
+            if key not in gp_cache:
+                gp_cache[key] = _cell(setup, rate, _rn, **kw)["goodput_rps"]
+            return gp_cache[key]
+        per_dis = {}
+        for dis in dis_setups:
+            c = _crossover(dis, reuse_name, lo, hi, gp, iters=iters)
+            per_dis[dis] = None if c is None else round(c, 3)
+        crossovers[reuse_name] = per_dis
+
+    shift = {}
+    for reuse_name in reuse_names:
+        if reuse_name == "none":
+            continue
+        per_dis = {}
+        for dis in dis_setups:
+            c0, c1 = crossovers["none"][dis], crossovers[reuse_name][dis]
+            per_dis[dis] = (None if c0 is None or c1 is None
+                            else round(c1 - c0, 3))
+        shift[reuse_name] = per_dis
+    for reuse_name, per_dis in crossovers.items():
+        for dis, c in per_dis.items():
+            print(f"crossover[{reuse_name}] {dis} vs {CO_SETUP}: "
+                  f"{'none in range' if c is None else f'~{c} req/s'}")
+
+    # (d) the below-crossover energy gap, with vs without reuse ---------
+    gap_dent = []
+    for dis in dis_setups:
+        for rate in rates:
+            base_gap = (cell(dis, rate, "none")["total_j"]
+                        - cell(CO_SETUP, rate, "none")["total_j"])
+            for reuse_name in reuse_names:
+                if reuse_name == "none":
+                    continue
+                gap = (cell(dis, rate, reuse_name)["total_j"]
+                       - cell(CO_SETUP, rate, reuse_name)["total_j"])
+                gap_dent.append({
+                    "dis": dis, "rate_rps": rate, "reuse": reuse_name,
+                    "gap_none_j": round(base_gap, 2),
+                    "gap_reuse_j": round(gap, 2),
+                    "dent_j": round(gap - base_gap, 2)})
+    dented = [g for g in gap_dent if g["dent_j"] < 0]
+    for g in gap_dent:
+        print(f"gap[{g['dis']}@{g['rate_rps']}/{g['reuse']}]: "
+              f"{g['gap_none_j']:+.0f} J -> {g['gap_reuse_j']:+.0f} J "
+              f"({g['dent_j']:+.0f} J)")
+
+    payload = {
+        "arch": arch, "n_requests": n, "seed": seed,
+        "slo": {"ttft_s": slo.ttft_s, "tpot_s": slo.tpot_s},
+        "rates_rps": list(rates),
+        "prefix_len": PREFIX_LEN, "vocab_size": VOCAB,
+        "setups": {"co": CO_SETUP, "dis": list(dis_setups)},
+        "reuse_configs": {k: (None if v is None else v.encode())
+                          for k, v in REUSE_CFGS.items()
+                          if k in reuse_names},
+        "points": records,
+        "claims": {
+            "reuse_engaged": True,          # asserted above
+            "prefill_j_cut_by_reuse": True,  # asserted above
+            "crossovers": crossovers,
+            "crossover_shift": shift,
+            "gap_dent_at": gap_dent,
+            "gap_dented_anywhere": bool(dented),
+        },
+    }
+    common.write_json(payload, "fig10_reuse_crossover.json", out=out)
+    return payload
+
+
+def main(argv=None):
+    ap = common.open_loop_arg_parser(__doc__)
+    ap.add_argument("--ttft-slo", type=float, default=DEFAULT_SLO.ttft_s)
+    ap.add_argument("--tpot-slo", type=float, default=DEFAULT_SLO.tpot_s)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="JSON output path (default benchmarks/out/)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI; emits the same JSON artifact")
+    ap.set_defaults(requests=None)   # distinguish unset from explicit
+    args = ap.parse_args(argv)
+    run(args.arch, rates=args.rate, n=args.requests,
+        slo=SLO(ttft_s=args.ttft_slo, tpot_s=args.tpot_slo),
+        smoke=args.smoke, seed=args.seed, out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,6 +16,12 @@ through both steppers:
            --check guard catches the bail rule silently disappearing
            (a >1 ratio here would mean fast coalesced across controller
            ticks, which is exactly the bug the rule forbids)
+  tiered-reuse
+           2 colocated engines with per-engine tiered KV stores and the
+           prefix-affinity router on a shared-prefix workload — the
+           tiered bail rule (DESIGN.md section 15) pins this ratio near
+           1.0 the same way: a >1 ratio means the fast stepper coalesced
+           across tier lookups whose residency is routing-visible
 
 The committed ``benchmarks/BENCH_simcore.json`` is the tracked baseline:
 re-run with ``--check`` to compare the CURRENT tree against it, failing
@@ -41,7 +47,8 @@ from repro.configs import get_config
 from repro.core.orchestrator import make_cluster
 from repro.fleet.cluster import STEPPERS
 from repro.fleet.spec import FleetSpec
-from repro.workload import open_loop_workload, PaperFixedLengths
+from repro.workload import (open_loop_workload, PaperFixedLengths,
+                            RAGSharedPrefixLengths)
 
 BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_simcore.json")
 OUT = os.path.join(os.path.dirname(__file__), "out", "BENCH_simcore.json")
@@ -63,6 +70,14 @@ SCENARIOS: Dict[str, Tuple[FleetSpec, dict]] = {
                                  controller="adaptive"),
                        dict(rate=12.0, n=96,
                             lengths=PaperFixedLengths(1024, 256), seed=0)),
+    "tiered-reuse": (FleetSpec(n_colocated=2, router="prefix-affinity",
+                               reuse={"mode": "prefix",
+                                      "tiers": {"hbm_pages": 64,
+                                                "dram_pages": 128,
+                                                "disk_pages": 256}}),
+                     dict(rate=8.0, n=64, vocab_size=512,
+                          lengths=RAGSharedPrefixLengths(prefix_len=2048),
+                          seed=0)),
 }
 
 

@@ -46,6 +46,11 @@ class EngineSeq:
     state: Any = None              # decode-state pytree (batch axis 1, B=1)
     last_logits: Any = None
     next_token: Optional[int] = None
+    # tiered-KV bookkeeping (repro.kvstore): the TierLookup from submit
+    # (carries fetch/spill legs + pinned page keys) and a consumed-once
+    # flag so preemption/re-admission never double-charges the fetch
+    tier_hit: Any = None
+    tier_charged: bool = False
 
     @property
     def seq_id(self) -> int:
@@ -82,6 +87,11 @@ class Engine:
         # skipped. Simulation-only — in real mode the matched KV bytes are
         # not actually materialized, so reuse is disabled there.
         self.prefix_cache = prefix_cache if executor is None else None
+        # tiered KV store (repro.kvstore, DESIGN.md section 15): set by
+        # the fleet when the spec's ReuseSpec carries a TierSpec.
+        # Mutually exclusive with prefix_cache (the fleet attaches one
+        # or the other); a tiered engine is never fast-path eligible.
+        self.kv_store = None
 
         self.t = 0.0                 # engine-local clock
         self.busy_s = 0.0
@@ -99,6 +109,9 @@ class Engine:
         self.running: List[EngineSeq] = []       # decode set
         self.decode_queue: deque = deque()       # (seq, handle, fetch_cost)
         self.pending_fetch: deque = deque()
+        # tier demand-fetches awaiting their priced latency/energy step
+        # (seqs whose submit-time lookup promoted pages out of DRAM/disk)
+        self.pending_tier_fetch: deque = deque()
         self.steps = 0
         self.preemptions = 0
         # cached steady-state decode run (repro.core.fastpath); always
@@ -110,7 +123,8 @@ class Engine:
     def _quiescent(self) -> bool:
         """No queued or in-flight work of any kind."""
         return not (self.waiting or self.prefilling or self.running
-                    or self.decode_queue or self.pending_fetch)
+                    or self.decode_queue or self.pending_fetch
+                    or self.pending_tier_fetch)
 
     def submit(self, req: Request) -> None:
         # A request cannot be worked on before it arrives: a QUIESCENT
@@ -125,7 +139,15 @@ class Engine:
         if self._quiescent():
             self.t = max(self.t, req.arrival_s)
         seq = EngineSeq(req=req, prefill_target=req.prompt_len)
-        if self.prefix_cache is not None and req.prompt_tokens is not None:
+        if self.kv_store is not None and req.prompt_tokens is not None:
+            hit = self.kv_store.lookup(req.prompt_tokens)
+            seq.tier_hit = hit
+            saved = hit.saved_tokens(req.prompt_len)
+            if saved > 0:
+                seq.prefill_done = min(req.prompt_len - hit.recompute_tokens,
+                                       req.prompt_len - 1)
+                req.reused_tokens = seq.prefill_done
+        elif self.prefix_cache is not None and req.prompt_tokens is not None:
             hit = self.prefix_cache.lookup(req.prompt_tokens)
             saved = hit.saved_tokens(req.prompt_len)
             if saved > 0:
@@ -169,7 +191,8 @@ class Engine:
 
     # ------------------------------------------------------------------
     def has_work(self) -> bool:
-        if self.prefilling or self.running or self.pending_fetch:
+        if self.prefilling or self.running or self.pending_fetch \
+                or self.pending_tier_fetch:
             return True
         if self.waiting and self.role in ("colocated", "prefill"):
             # progressive allocation: a single free page is enough to start
@@ -201,6 +224,13 @@ class Engine:
                 self.waiting.pop(i)
                 if seq.req.prefill_start_s is None:
                     seq.req.prefill_start_s = self.t
+                if seq.tier_hit is not None and not seq.tier_charged \
+                        and (seq.tier_hit.fetch_legs
+                             or seq.tier_hit.spill_legs):
+                    # the submit-time lookup pulled pages up the tier
+                    # hierarchy: run the priced fetch leg before this
+                    # sequence's prefill (step() drains it first)
+                    self.pending_tier_fetch.append(seq)
                 bisect.insort(self.prefilling, seq,
                               key=lambda s: s.priority)
         if self.role == "decode":
@@ -223,6 +253,9 @@ class Engine:
         self._admit()
         if self.pending_fetch:
             self._fetch_step()
+            return True
+        if self.pending_tier_fetch:
+            self._tier_fetch_step()
             return True
         if self.prefilling:
             return self._prefill_step()
@@ -288,6 +321,32 @@ class Engine:
             self.pool.free_seq(seq.seq_id)
         else:
             self.running.append(seq)
+        return self.t
+
+    # ------------------------------------------------------------------
+    def _tier_fetch_step(self) -> float:
+        """Meter one sequence's tiered-KV movement (DESIGN.md section
+        15). Demand-fetch legs occupy the engine at idle power for
+        their latency — stage ``tier-fetch``, sampled into the
+        PowerTrace, landing in TTFT exactly like a transfer fetch.
+        Spill legs displaced by the promotion are asynchronous DMA:
+        energy only, stage ``tier-spill``, no engine occupancy."""
+        seq = self.pending_tier_fetch.popleft()
+        hit = seq.tier_hit
+        seq.tier_charged = True
+        latency = 0.0
+        for leg in hit.fetch_legs:
+            for comp, joules in leg.energy_j.items():
+                self.meter.add(comp, joules, stage="tier-fetch")
+            latency += leg.latency_s
+        for leg in hit.spill_legs:
+            for comp, joules in leg.energy_j.items():
+                self.meter.add(comp, joules, stage="tier-spill")
+        if latency > 0.0:
+            self.meter.add_power(self.name, self.cost.idle_power_w(),
+                                 latency, stage="tier-fetch", t0=self.t)
+            self.t += latency
+            self.busy_s += latency
         return self.t
 
     # ------------------------------------------------------------------
@@ -379,7 +438,19 @@ class Engine:
                 self.prefilling.remove(seq)
                 seq.req.prefill_done_s = t_end
                 self.pool.touch(seq.seq_id)
-                if self.prefix_cache is not None and \
+                if self.kv_store is not None and \
+                        seq.req.prompt_tokens is not None:
+                    # newly computed pages are born in HBM; demotions
+                    # forced by the overflow — and by releasing this
+                    # sequence's pins — are priced spill legs
+                    legs = self.kv_store.insert(seq.req.prompt_tokens)
+                    if seq.tier_hit is not None:
+                        legs += self.kv_store.release(seq.tier_hit.pins)
+                    for leg in legs:
+                        for comp, joules in leg.energy_j.items():
+                            self.meter.add(comp, joules,
+                                           stage="tier-spill")
+                elif self.prefix_cache is not None and \
                         seq.req.prompt_tokens is not None:
                     self.prefix_cache.insert(seq.req.prompt_tokens)
                 if self.executor is not None:

@@ -62,7 +62,10 @@ def fast_decode_eligible(e) -> bool:
     decode step of its current running batch (see module docstring)."""
     if e.executor is not None:
         return False
-    if e.pending_fetch or e.prefilling or e.waiting or not e.running:
+    if getattr(e, "kv_store", None) is not None:
+        return False               # tiered KV store: exact only (s15)
+    if e.pending_fetch or getattr(e, "pending_tier_fetch", None) \
+            or e.prefilling or e.waiting or not e.running:
         return False
     gov = e.governor
     if gov is not None and not gov.coalescible:

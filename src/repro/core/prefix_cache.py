@@ -17,14 +17,27 @@ engines feed to the cost model. Page eviction is LRU by insertion/touch.
 from __future__ import annotations
 
 import collections
+import hashlib
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 
+def _stable_digest(salt: int, payload: bytes) -> int:
+    """64-bit blake2b digest of ``salt || payload``, identical across
+    processes. The builtin ``hash()`` is salted per-process by
+    PYTHONHASHSEED, which would make page keys — and therefore hit
+    statistics, tier residency, and router affinity scores — differ
+    between a worker and the process that warmed the cache."""
+    h = hashlib.blake2b(digest_size=8)
+    h.update(salt.to_bytes(8, "little", signed=True))
+    h.update(payload)
+    return int.from_bytes(h.digest(), "little", signed=True)
+
+
 def _page_hash(tokens: np.ndarray, salt: int = 0) -> int:
-    return hash((salt, tokens.tobytes()))
+    return _stable_digest(salt, tokens.tobytes())
 
 
 @dataclass
@@ -65,7 +78,7 @@ class PrefixCache:
 
     @staticmethod
     def _chain(prev: int, page: np.ndarray) -> int:
-        return hash((prev, page.tobytes()))
+        return _stable_digest(prev, page.tobytes())
 
     def _touch(self, table, key) -> None:
         table.move_to_end(key)
@@ -84,6 +97,25 @@ class PrefixCache:
             self._insert(self._prefix, chain)
             if self.pic:
                 self._insert(self._content, _page_hash(page))
+
+    # ------------------------------------------------------------------
+    def peek_match(self, tokens: Sequence[int]) -> int:
+        """Matched tokens a ``lookup`` would report, WITHOUT touching LRU
+        order or hit counters — the prefix-affinity router probes every
+        engine's cache per request, and a probe must not reorder
+        eviction or inflate statistics."""
+        matched_pages = 0
+        if not self.pic:
+            chain = 0
+            for page in self._pages(tokens):
+                chain = self._chain(chain, page)
+                if chain not in self._prefix:
+                    break
+                matched_pages += 1
+        else:
+            matched_pages = sum(1 for page in self._pages(tokens)
+                                if _page_hash(page) in self._content)
+        return matched_pages * self.page_size
 
     # ------------------------------------------------------------------
     def lookup(self, tokens: Sequence[int]) -> ReuseResult:

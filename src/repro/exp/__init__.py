@@ -16,11 +16,12 @@ from .record import (EnergyView, RunRecord, SCHEMA_VERSION,
                      decode_side_j, prefill_side_j)
 from .runner import (default_cache, run, run_grid, set_default_cache,
                      sim_count, simulate, uncached_sim_count)
-from .spec import (ClosedLoop, Experiment, OpenLoop, ReuseSpec,
+from .spec import (ClosedLoop, Experiment, OpenLoop, ReuseSpec, TierSpec,
                    apply_spec_knobs, as_cacheable, registered_arch)
 
 __all__ = [
-    "Experiment", "ClosedLoop", "OpenLoop", "ReuseSpec", "Grid",
+    "Experiment", "ClosedLoop", "OpenLoop", "ReuseSpec", "TierSpec",
+    "Grid",
     "RunRecord", "EnergyView", "SCHEMA_VERSION",
     "prefill_side_j", "decode_side_j",
     "ResultCache", "CacheStats", "default_cache_root",

@@ -33,9 +33,15 @@ def prefill_side_j(by_stage: Dict[str, float]) -> float:
     itself plus the KV store leg it drives. THE per-leg attribution
     rule (store -> prefill, fetch -> decode) — fig5, the F6 claim
     check, and the DVFS sweeps all call this, so changing the rule
-    changes all of them together."""
-    return by_stage.get("prefill", 0.0) + by_stage.get("transfer-store",
-                                                       0.0)
+    changes all of them together. Tiered-KV traffic (DESIGN.md section
+    15) is prefill-side by the same rule: demand fetches precede (and
+    delay) the prefill that consumes the pages, spills are driven by
+    prefill-side inserts. These stages only exist for tiered specs, so
+    pre-PR records are numerically unchanged (no schema bump)."""
+    return by_stage.get("prefill", 0.0) \
+        + by_stage.get("transfer-store", 0.0) \
+        + by_stage.get("tier-fetch", 0.0) \
+        + by_stage.get("tier-spill", 0.0)
 
 
 def decode_side_j(by_stage: Dict[str, float]) -> float:

@@ -89,7 +89,9 @@ def simulate(exp: Experiment, *, executor_factory=None) -> RunRecord:
     cluster = FleetCluster(
         exp.fleet, cfg, prefill_token_budget=exp.prefill_token_budget,
         page_size=exp.page_size, executor_factory=executor_factory)
-    if exp.reuse is not None:
+    if exp.reuse is not None and exp.reuse.tiers is None:
+        # flat shared reuse: this pre-tier branch is kept VERBATIM so
+        # cached reuse_bench results replay bit-identical
         from repro.core.prefix_cache import PrefixCache
         pc = PrefixCache(capacity_pages=exp.reuse.capacity_pages,
                          page_size=exp.reuse.page_size,
@@ -99,6 +101,10 @@ def simulate(exp: Experiment, *, executor_factory=None) -> RunRecord:
             pc.insert(reqs[0].prompt_tokens)
         for e in cluster.engines:
             e.prefix_cache = pc
+    elif exp.reuse is not None:
+        # tiered: per-engine stores; warming happens inside run() via
+        # the cluster's _warm_stores (spills priced at t=0)
+        cluster._attach_reuse(exp.reuse)
     result = cluster.run(reqs)
     decisions = sum(len(e.governor.decisions) for e in cluster.engines
                     if e.governor is not None)

@@ -11,7 +11,8 @@ frozen value object:
   * ``OpenLoop``: arrival process x length mix x n x seed — the
     DistServe-style load axis.
   * ``ReuseSpec``: the prefix-cache / PIC configuration of the KV-reuse
-    experiment (section II-C).
+    experiment (section II-C) — defined in ``repro.kvstore`` (where the
+    tiered extension lives, DESIGN.md section 15) and re-exported here.
 
 A spec is canonically JSON-serializable (``to_json`` / ``from_json``
 round-trip exactly) and content-addressed: ``spec_hash()`` is the
@@ -34,13 +35,14 @@ import numpy as np
 
 from repro.core.request import Request, SLO, random_workload
 from repro.fleet.spec import FleetSpec, as_fleet_spec, setup_label
+from repro.kvstore import ReuseSpec, TierSpec, as_reuse_spec
 from repro.workload.arrivals import _ARRIVALS, ArrivalProcess
 from repro.workload.lengths import (_MIXES, LengthMix, MixtureLengths,
                                     PaperFixedLengths)
 from repro.workload.spec import WorkloadSpec
 
-__all__ = ["ClosedLoop", "OpenLoop", "ReuseSpec", "Experiment",
-           "encode_slo", "decode_slo", "registered_arch",
+__all__ = ["ClosedLoop", "OpenLoop", "ReuseSpec", "TierSpec",
+           "Experiment", "encode_slo", "decode_slo", "registered_arch",
            "apply_spec_knobs", "as_cacheable"]
 
 
@@ -121,6 +123,12 @@ def encode_fleet(spec: FleetSpec) -> Dict[str, Any]:
         d.pop("controller")
     else:
         d["controller"] = _encode_fields(spec.controller)
+    if spec.reuse is None:
+        # same omit-when-None rule for fleet-level KV reuse (PR 8):
+        # every pre-reuse spec hash survives bit-identical
+        d.pop("reuse")
+    else:
+        d["reuse"] = spec.reuse.encode()
     return d
 
 
@@ -268,28 +276,6 @@ def as_workload(w) -> Workload:
 
 
 # ----------------------------------------------------------------------
-@dataclass(frozen=True)
-class ReuseSpec:
-    """KV-reuse configuration (paper section II-C): a shared
-    ``PrefixCache`` on every engine, optionally PIC (position-
-    independent, CacheBlend-style selective recompute), warmed with the
-    first request's prompt before the run."""
-    mode: str = "prefix"               # "prefix" | "pic"
-    capacity_pages: int = 200_000
-    page_size: int = 16
-    recompute_frac: float = 0.15
-    warm: bool = True
-
-    def __post_init__(self):
-        if self.mode not in ("prefix", "pic"):
-            raise ValueError(f"reuse mode must be prefix|pic, "
-                             f"got {self.mode!r}")
-
-    def encode(self) -> Dict[str, Any]:
-        return _encode_fields(self)
-
-
-# ----------------------------------------------------------------------
 @dataclass(frozen=True, eq=True)
 class Experiment:
     """One cell of the benchmark matrix, fully determined and hashable.
@@ -321,6 +307,9 @@ class Experiment:
         object.__setattr__(self, "workload", as_workload(self.workload))
         object.__setattr__(self, "setup",
                            label if label is not None else self.fleet.name)
+        if self.reuse is not None and not isinstance(self.reuse,
+                                                     ReuseSpec):
+            object.__setattr__(self, "reuse", as_reuse_spec(self.reuse))
 
     # ------------------------------------------------------------------
     # canonical serialization / content address
@@ -342,7 +331,8 @@ class Experiment:
         return cls(arch=d["arch"], fleet=decode_fleet(d["fleet"]),
                    workload=decode_workload(d["workload"]),
                    slo=decode_slo(d.get("slo")), setup=d.get("setup"),
-                   reuse=ReuseSpec(**d["reuse"]) if d.get("reuse") else None,
+                   reuse=as_reuse_spec(d["reuse"]) if d.get("reuse")
+                   else None,
                    prefill_token_budget=d.get("prefill_token_budget", 8192),
                    page_size=d.get("page_size", 16))
 
@@ -384,6 +374,13 @@ class Experiment:
         a policy name, kwargs dict, or ``ControllerSpec``."""
         return replace(self, fleet=replace(self.fleet,
                                            controller=controller))
+
+    def with_reuse(self, reuse) -> "Experiment":
+        """Attach (or with None, detach) experiment-level KV reuse — a
+        mode string, kwargs dict (``tiers`` as a nested dict is fine),
+        or ``ReuseSpec``. Fleet-level reuse (``FleetSpec.reuse``) is the
+        other home: identical simulation, distinct cache hash."""
+        return replace(self, reuse=as_reuse_spec(reuse))
 
     def with_workload(self, **kw) -> "Experiment":
         return replace(self, workload=replace(self.workload, **kw))
@@ -453,6 +450,8 @@ def apply_spec_knobs(exp: "Experiment", kw: Dict[str, Any]):
         exp = exp.with_governor(kw.pop("governor"))
     if "controller" in kw:
         exp = exp.with_controller(kw.pop("controller"))
+    if "reuse" in kw:
+        exp = exp.with_reuse(kw.pop("reuse"))
     return exp, kw
 
 

@@ -20,14 +20,16 @@ from .controller import (CONTROLLERS, AdaptiveController, ControllerSpec,
                          ScheduleController, as_controller_spec,
                          make_controller)
 from .router import (KVFreeSpace, LeastOutstandingTokens, MinEnergy,
-                     POLICIES, Policy, RoundRobin, Router, make_policy)
+                     POLICIES, Policy, PrefixAffinity, RoundRobin,
+                     Router, make_policy)
 from .spec import (DIS_PATH, MEDIA, SETUPS, FleetSpec, as_fleet_spec,
                    setup_label)
 
 __all__ = [
     "FleetCluster", "SetupResult",
     "Router", "Policy", "RoundRobin", "LeastOutstandingTokens",
-    "KVFreeSpace", "MinEnergy", "POLICIES", "make_policy",
+    "KVFreeSpace", "MinEnergy", "PrefixAffinity", "POLICIES",
+    "make_policy",
     "FleetSpec", "as_fleet_spec", "setup_label",
     "SETUPS", "DIS_PATH", "MEDIA",
     "ControllerSpec", "FleetController", "NullController",

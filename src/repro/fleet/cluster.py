@@ -31,8 +31,10 @@ from repro.core.engine import Engine, EngineSeq, RealExecutor
 from repro.core.fastpath import coalesce_window
 from repro.core.kvcache import PagedKVPool
 from repro.core.request import Request, WorkloadMetrics, summarize
+from repro.core.prefix_cache import PrefixCache
 from repro.core.transfer import LegCost, TransferPath, make_path
 from repro.govern import make_governor
+from repro.kvstore import ReuseSpec, TieredKVStore, as_reuse_spec
 from repro.govern.telemetry import ABSENT, IDLE, SLEEP, PowerTrace
 
 from .controller import make_controller
@@ -72,6 +74,7 @@ class FleetCluster:
                  phi_prefill: Optional[Phi] = None,
                  phi_decode: Optional[Phi] = None,
                  governor: Optional[Union[str, Tuple[str, ...]]] = None,
+                 reuse: Optional[Union[str, dict, ReuseSpec]] = None,
                  page_size: int = 16,
                  prefill_token_budget: int = 8192,
                  pool_bytes: Optional[float] = None,
@@ -87,6 +90,10 @@ class FleetCluster:
             # entry point taking **cluster_kw can run a governor
             from dataclasses import replace
             spec = replace(spec, governor=governor)
+        if reuse is not None:
+            # same sweep-plumbing shape for KV reuse (DESIGN.md s15)
+            from dataclasses import replace
+            spec = replace(spec, reuse=reuse)
         self.spec = spec
         self.setup = spec.name
         self.cfg = cfg
@@ -219,6 +226,71 @@ class FleetCluster:
             self.kv_router = Router(kv_engines, spec.kv_router,
                                     spec.seed + 1, accept=accept_d)
 
+        # ---- KV reuse (repro.kvstore, DESIGN.md section 15) ----------
+        self._reuse: Optional[ReuseSpec] = None
+        self._shared_prefix_cache: Optional[PrefixCache] = None
+        if spec.reuse is not None:
+            self._attach_reuse(spec.reuse)
+
+    # ------------------------------------------------------------------
+    def _attach_reuse(self, reuse: Union[str, dict, ReuseSpec]) -> None:
+        """Attach the spec'd KV reuse machinery to the engines. Flat
+        (``tiers is None``): ONE shared ``PrefixCache`` across the fleet
+        — the cluster-wide reuse the paper's section II-C experiments
+        model, fast-stepper safe (lookups/inserts happen in exact
+        submit/prefill steps). Tiered: one ``TieredKVStore`` PER engine
+        (residency is the router's locality signal, so it must be
+        per-instance), attached to every engine regardless of role so
+        controller role flips keep their store. Real-executor engines
+        are skipped — matched KV bytes are not actually materialized,
+        same rule as ``Engine.prefix_cache``."""
+        r = as_reuse_spec(reuse)
+        self._reuse = r
+        if r.tiers is None:
+            pc = PrefixCache(capacity_pages=r.capacity_pages,
+                             page_size=r.page_size,
+                             pic=(r.mode == "pic"),
+                             recompute_frac=r.recompute_frac)
+            self._shared_prefix_cache = pc
+            for e in self.engines:
+                if e.executor is None:
+                    e.prefix_cache = pc
+            return
+        page_bytes = max(self.cost.kv_bytes_per_token, 1) * r.page_size
+        for e in self.engines:
+            if e.executor is None:
+                e.kv_store = TieredKVStore(
+                    r.tiers, mode=r.mode, page_size=r.page_size,
+                    recompute_frac=r.recompute_frac,
+                    page_bytes=page_bytes, host=self.host)
+
+    @property
+    def tiered(self) -> bool:
+        """Any engine carrying a TieredKVStore — the fast-stepper bail
+        signal (checked on engines, not the spec, so tests attaching
+        stores directly are covered too)."""
+        return any(e.kv_store is not None for e in self.engines)
+
+    def _warm_stores(self, requests: List[Request]) -> None:
+        """``ReuseSpec.warm``: pre-insert request 0's prompt before the
+        run so the very first lookup can hit (the reuse benchmarks'
+        warmed-cache convention). Tiered warm inserts are priced like
+        any other insert — overflow spills are metered at t=0."""
+        r = self._reuse
+        if r is None or not r.warm or not requests:
+            return
+        toks = requests[0].prompt_tokens
+        if toks is None:
+            return
+        if self._shared_prefix_cache is not None:
+            self._shared_prefix_cache.insert(toks)
+            return
+        for e in self.engines:
+            if e.kv_store is not None:
+                for leg in e.kv_store.insert(toks):
+                    for comp, joules in leg.energy_j.items():
+                        self.meter.add(comp, joules, stage="tier-spill")
+
     # ------------------------------------------------------------------
     def _push(self, t: float, fn: Callable[[], None]) -> None:
         heapq.heappush(self._events, (t, next(self._counter), fn))
@@ -240,7 +312,7 @@ class FleetCluster:
         pick can come up empty (every decode instance asleep/draining):
         the handoff parks — pages still held, the backpressure is real —
         until ``_provide`` wakes or flips capacity."""
-        dec = self.kv_router.pick()
+        dec = self.kv_router.pick(req=seq.req)
         if dec is None:
             self._parked_transfers.append((engine, seq, t_done))
             self._provide("decode", t_done)
@@ -315,7 +387,7 @@ class FleetCluster:
 
     def _on_arrival(self, r: Request) -> None:
         self._pending_arrivals -= 1
-        eng = self.frontend.pick()
+        eng = self.frontend.pick(req=r)
         if eng is None:     # controller-active and nothing accepting
             self._parked_requests.append(r)
             self._provide("prefill", r.arrival_s)
@@ -487,7 +559,7 @@ class FleetCluster:
         """Re-route parked requests/handoffs against current capacity."""
         still_r: List[Request] = []
         for r in self._parked_requests:
-            eng = self.frontend.pick()
+            eng = self.frontend.pick(req=r)
             if eng is None:
                 still_r.append(r)
             else:
@@ -495,7 +567,7 @@ class FleetCluster:
         self._parked_requests = still_r
         still_t: List[Tuple[Engine, EngineSeq, float]] = []
         for (src, seq, td) in self._parked_transfers:
-            dec = self.kv_router.pick()
+            dec = self.kv_router.pick(req=seq.req)
             if dec is None:
                 still_t.append((src, seq, td))
             else:
@@ -664,9 +736,15 @@ class FleetCluster:
         # a vectorized window, so controller-active runs take the exact
         # stepper unless the controller declares itself coalescible-
         # quiescent (only the no-op NullController does). Both steppers
-        # therefore remain observably identical for every spec.
+        # therefore remain observably identical for every spec. A
+        # tiered KV store bails the same way (DESIGN.md section 15):
+        # submit-time lookups mutate cross-engine-visible residency and
+        # inject tier-fetch occupancy mid-window, so coalescing across
+        # them is unsound; flat shared reuse stays fast-eligible (its
+        # lookups/inserts live entirely inside exact steps).
         fast = stepper == "fast" and (self.controller is None
-                                      or self.controller.coalescible)
+                                      or self.controller.coalescible)             and not self.tiered
+        self._warm_stores(requests)
         self.submit(requests)
         if self.controller is not None and self.controller.wants_ticks:
             self._schedule_tick(self.controller.spec.interval_s)

@@ -31,6 +31,13 @@ Policies (registry ``POLICIES`` / ``make_policy``):
                            phi (a governor may have downclocked it)
                            times its outstanding backlog — the
                            energy-aware policy fig8's fleet runs use
+  prefix-affinity          pick the engine already holding the longest
+                           matched prefix of the request's prompt in
+                           its KV store (tiered or flat), falling back
+                           to least-outstanding-tokens on cold
+                           prefixes — the KV-locality frontend policy
+                           DESIGN.md section 15's tiered store exists
+                           to feed
 
 Ties are broken with a ``numpy`` Generator seeded from the spec, so a
 fleet run is reproducible from ``(spec, workload)`` alone: same seed,
@@ -46,14 +53,19 @@ from repro.core.engine import Engine
 
 
 class Policy:
-    """Base: ``select(engines, rng) -> engine``. Stateful policies (the
-    round-robin rotation) keep their state on the instance, so build a
-    fresh policy per router (``make_policy``)."""
+    """Base: ``select(engines, rng, req=None) -> engine``. Stateful
+    policies (the round-robin rotation) keep their state on the
+    instance, so build a fresh policy per router (``make_policy``).
+
+    ``req`` is the request being routed (None for KV-transfer picks
+    made before PR 8's threading, and in older call sites/tests) —
+    only content-aware policies like ``prefix-affinity`` read it; the
+    load-only policies accept and ignore it."""
 
     name = "base"
 
     def select(self, engines: Sequence[Engine],
-               rng: np.random.Generator) -> Engine:
+               rng: np.random.Generator, req=None) -> Engine:
         raise NotImplementedError
 
 
@@ -74,7 +86,7 @@ class RoundRobin(Policy):
     def __init__(self):
         self._i = 0
 
-    def select(self, engines, rng):
+    def select(self, engines, rng, req=None):
         e = engines[self._i % len(engines)]
         self._i += 1
         return e
@@ -83,7 +95,7 @@ class RoundRobin(Policy):
 class LeastOutstandingTokens(Policy):
     name = "least-outstanding-tokens"
 
-    def select(self, engines, rng):
+    def select(self, engines, rng, req=None):
         return _argmin(engines, lambda e: e.outstanding_tokens(), rng)
 
 
@@ -106,7 +118,7 @@ class KVFreeSpace(Policy):
         return e.pool.free_pages - pending \
             - getattr(e, "inflight_kv_pages", 0)
 
-    def select(self, engines, rng):
+    def select(self, engines, rng, req=None):
         # most headroom == least pool pressure; negate for argmin
         return _argmin(engines, lambda e: -self._headroom(e), rng)
 
@@ -129,8 +141,46 @@ class MinEnergy(Policy):
         return e.cost.joules_per_token(e.phi, chunk=e.budget) \
             * (e.outstanding_tokens() + 1)
 
-    def select(self, engines, rng):
+    def select(self, engines, rng, req=None):
         return _argmin(engines, self._projected_j, rng)
+
+
+class PrefixAffinity(Policy):
+    """KV-locality routing (Dynamo/SGLang cache-aware style, DESIGN.md
+    section 15): score each engine by how many of the request's prompt
+    tokens are already resident in its KV store (tiered
+    ``TieredKVStore.peek_match`` or flat shared ``PrefixCache.
+    peek_match`` — both probe without touching LRU order or counters),
+    and break score ties by least-outstanding-tokens.
+
+    The score tuple ``(-matched, outstanding)`` makes the cold-prefix /
+    no-store case BYTE-IDENTICAL to plain least-outstanding-tokens:
+    when every match is 0 the first component never discriminates, the
+    tie set and the seeded rng draw sequence are exactly LOT's
+    (tests/test_kvstore.py machine-checks this)."""
+
+    name = "prefix-affinity"
+
+    @staticmethod
+    def _matched(e: Engine, req) -> int:
+        if req is None:
+            return 0
+        toks = getattr(req, "prompt_tokens", None)
+        if toks is None:
+            return 0
+        store = getattr(e, "kv_store", None)
+        if store is not None:
+            return store.peek_match(toks)
+        cache = getattr(e, "prefix_cache", None)
+        if cache is not None:
+            return cache.peek_match(toks)
+        return 0
+
+    def select(self, engines, rng, req=None):
+        return _argmin(
+            engines,
+            lambda e: (-self._matched(e, req), e.outstanding_tokens()),
+            rng)
 
 
 POLICIES = {
@@ -138,6 +188,7 @@ POLICIES = {
     LeastOutstandingTokens.name: LeastOutstandingTokens,
     KVFreeSpace.name: KVFreeSpace,
     MinEnergy.name: MinEnergy,
+    PrefixAffinity.name: PrefixAffinity,
 }
 
 
@@ -173,14 +224,14 @@ class Router:
         self._rng = np.random.default_rng(seed)
         self.accept = accept
 
-    def pick(self) -> Optional[Engine]:
+    def pick(self, req=None) -> Optional[Engine]:
         if self.accept is None:
             if len(self.engines) == 1:   # the 1P:1D / co-1gpu fast path
                 return self.engines[0]
-            return self.policy.select(self.engines, self._rng)
+            return self.policy.select(self.engines, self._rng, req=req)
         cands = [e for e in self.engines if self.accept(e)]
         if not cands:
             return None
         if len(cands) == 1:
             return cands[0]
-        return self.policy.select(cands, self._rng)
+        return self.policy.select(cands, self._rng, req=req)

@@ -30,6 +30,8 @@ import re
 from dataclasses import dataclass, replace
 from typing import Optional, Tuple, Union
 
+from repro.kvstore import ReuseSpec, as_reuse_spec
+
 from .controller import ControllerSpec, as_controller_spec
 
 # mirrors repro.core.orchestrator (defined here to keep the import
@@ -88,6 +90,14 @@ class FleetSpec:
     # key entirely so every existing exp-cache hash is preserved).
     # Accepts a policy name, a ControllerSpec, or a kwargs dict.
     controller: Optional[Union[str, dict, ControllerSpec]] = None
+    # KV reuse at the fleet level (repro.kvstore, DESIGN.md section 15):
+    # None = no reuse (the pre-reuse code path byte-for-byte — spec
+    # encodings omit the key so every existing exp-cache hash is
+    # preserved); a flat ReuseSpec attaches one shared PrefixCache to
+    # every engine; a ReuseSpec with ``tiers`` set attaches a per-engine
+    # TieredKVStore (and makes the fast stepper bail to exact). Accepts
+    # a mode string ("prefix"/"pic"), a kwargs dict, or a ReuseSpec.
+    reuse: Optional[Union[str, dict, ReuseSpec]] = None
 
     # ------------------------------------------------------------------
     def __post_init__(self):
@@ -120,6 +130,8 @@ class FleetSpec:
         if self.controller is not None:
             object.__setattr__(self, "controller",
                                as_controller_spec(self.controller))
+        if self.reuse is not None:
+            object.__setattr__(self, "reuse", as_reuse_spec(self.reuse))
         # broadcast now so a malformed tuple fails at spec construction
         self.phis_prefill
         self.phis_decode

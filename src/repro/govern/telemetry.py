@@ -39,7 +39,9 @@ class PowerSample:
     t0: float
     t1: float
     watts: float
-    stage: str              # prefill / decode / transfer-* / idle / other
+    stage: str              # prefill / decode / transfer-* / tier-fetch
+                            #   (tiered-KV promotions, DESIGN.md s15) /
+                            #   idle / other
     state: str = ACTIVE     # "active" (work) or "idle" (static floor)
 
     @property

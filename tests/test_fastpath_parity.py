@@ -24,7 +24,8 @@ from repro.configs import get_config
 from repro.core.orchestrator import run_setup
 from repro.fleet.spec import FleetSpec
 from repro.workload import (DEFAULT_INTERACTIVE_SLO, PaperFixedLengths,
-                            ShareGPTLengths, open_loop_workload)
+                            RAGSharedPrefixLengths, ShareGPTLengths,
+                            open_loop_workload)
 
 CFG = get_config("llama32-3b")
 
@@ -120,6 +121,31 @@ GRID = [
     (FleetSpec(n_prefill=1, n_decode=2, medium="host",
                controller="schedule", governor="queue-depth"),
      dict(rate=4.0, n=10, lengths=PaperFixedLengths(2048, 64), seed=9)),
+    # KV reuse (DESIGN.md section 15): a flat shared cache stays
+    # fast-eligible and must coalesce bit-identically; tiered stores
+    # make the fast stepper bail to exact — parity must hold either way
+    # (that IS the bail rule's contract)
+    (FleetSpec(n_colocated=2, reuse="prefix"),
+     dict(rate=6.0, n=12, lengths=RAGSharedPrefixLengths(prefix_len=1024),
+          vocab_size=512, seed=10)),
+    (FleetSpec(n_colocated=2, router="prefix-affinity",
+               reuse={"mode": "prefix",
+                      "tiers": {"hbm_pages": 64, "dram_pages": 128,
+                                "disk_pages": 256}}),
+     dict(rate=6.0, n=12, lengths=RAGSharedPrefixLengths(prefix_len=1024),
+          vocab_size=512, seed=11)),
+    (FleetSpec(n_prefill=1, n_decode=1, medium="ici",
+               router="prefix-affinity",
+               reuse={"mode": "pic",
+                      "tiers": {"hbm_pages": 32, "dram_pages": 64}}),
+     dict(rate=4.0, n=10, lengths=RAGSharedPrefixLengths(prefix_len=2048),
+          vocab_size=512, slo=DEFAULT_INTERACTIVE_SLO, seed=12)),
+    (FleetSpec(n_prefill=2, n_decode=2, medium="host",
+               reuse={"mode": "pic", "tiers": {"hbm_pages": 16,
+                                               "dram_pages": 32,
+                                               "prefetch_pages": 2}}),
+     dict(rate=8.0, n=14, lengths=RAGSharedPrefixLengths(prefix_len=1024),
+          vocab_size=512, seed=13)),
 ]
 
 
@@ -141,30 +167,41 @@ def test_stepper_arg_validation():
 # ----------------------------------------------------------------------
 MEDIA = ("ici", "host", "disk")
 GOVERNORS = ("static", "queue-depth", "slo-slack")
-ROUTERS = ("round-robin", "least-outstanding-tokens")
+ROUTERS = ("round-robin", "least-outstanding-tokens", "prefix-affinity")
 KV_ROUTERS = ("kv-free-space", "least-outstanding-tokens")
 ARRIVALS = ("poisson", "gamma")
 # the controller axis: none / static-equivalent no-op / active
 CONTROLLERS = (None, "null", "schedule", "adaptive")
+# the reuse axis: none / flat shared cache (fast-eligible) / tiered
+# stores (fast bails to exact); small budgets so evictions + tier
+# traffic actually happen at fuzz workload sizes
+REUSES = (None, "prefix", {"mode": "pic"},
+          {"mode": "prefix", "tiers": {"hbm_pages": 16, "dram_pages": 32,
+                                       "disk_pages": 32}},
+          {"mode": "pic", "tiers": {"hbm_pages": 8, "dram_pages": 16,
+                                    "prefetch_pages": 2}})
 
 N_EXAMPLES = int(os.environ.get("REPRO_PARITY_EXAMPLES", "20"))
 
 
 def _spec_strategy():
     colocated = st.builds(
-        lambda n, gov, ctl: FleetSpec(n_colocated=n, governor=gov,
-                                      controller=ctl),
+        lambda n, gov, ctl, r, reuse: FleetSpec(
+            n_colocated=n, governor=gov, controller=ctl, router=r,
+            reuse=reuse),
         st.integers(1, 2), st.sampled_from(GOVERNORS),
-        st.sampled_from(CONTROLLERS))
+        st.sampled_from(CONTROLLERS), st.sampled_from(ROUTERS),
+        st.sampled_from(REUSES))
     disagg = st.builds(
-        lambda p, d, m, r, kr, gov, ctl, phi_p, phi_d: FleetSpec(
+        lambda p, d, m, r, kr, gov, ctl, phi_p, phi_d, reuse: FleetSpec(
             n_prefill=p, n_decode=d, medium=m, router=r, kv_router=kr,
             governor=gov, controller=ctl, phi_prefill=phi_p,
-            phi_decode=phi_d),
+            phi_decode=phi_d, reuse=reuse),
         st.integers(1, 3), st.integers(1, 3), st.sampled_from(MEDIA),
         st.sampled_from(ROUTERS), st.sampled_from(KV_ROUTERS),
         st.sampled_from(GOVERNORS), st.sampled_from(CONTROLLERS),
-        st.sampled_from((0.6, 0.8, 1.0)), st.sampled_from((0.7, 1.0)))
+        st.sampled_from((0.6, 0.8, 1.0)), st.sampled_from((0.7, 1.0)),
+        st.sampled_from(REUSES))
     return st.one_of(colocated, disagg)
 
 
@@ -174,16 +211,21 @@ def _workload_strategy():
         st.sampled_from((512, 2048, 4096, 8192)),
         st.sampled_from((1, 8, 32, 128, 256)))
     sharegpt = st.just(ShareGPTLengths())
+    rag = st.builds(lambda p: RAGSharedPrefixLengths(prefix_len=p),
+                    st.sampled_from((512, 1024, 2048)))
     return st.builds(
-        lambda rate, n, lengths, arrival, slo, seed: dict(
+        lambda rate, n, lengths, arrival, slo, seed, vocab: dict(
             rate=rate, n=n, lengths=lengths, arrival=arrival,
-            slo=slo, seed=seed),
+            slo=slo, seed=seed, vocab_size=vocab),
         st.sampled_from((1.0, 4.0, 12.0, 32.0)),
         st.integers(2, 14),
-        st.one_of(fixed, sharegpt),
+        st.one_of(fixed, sharegpt, rag),
         st.sampled_from(ARRIVALS),
         st.sampled_from((None, DEFAULT_INTERACTIVE_SLO)),
-        st.integers(0, 2 ** 16))
+        st.integers(0, 2 ** 16),
+        # vocab_size=0 -> no prompt token arrays -> reuse stays inert;
+        # both arms must hold parity
+        st.sampled_from((0, 512)))
 
 
 if HAS_HYPOTHESIS:

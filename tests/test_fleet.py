@@ -133,7 +133,8 @@ def test_unknown_policy_rejected():
     with pytest.raises(ValueError):
         make_policy("most-vibes")
     assert set(POLICIES) == {"round-robin", "least-outstanding-tokens",
-                             "kv-free-space", "min-energy"}
+                             "kv-free-space", "min-energy",
+                             "prefix-affinity"}
 
 
 def test_engine_outstanding_tokens_is_role_aware():

@@ -42,6 +42,59 @@ def test_lru_eviction_order():
     pool.check_invariants()
 
 
+def test_evict_from_empty_pool_returns_none():
+    pool = PagedKVPool(num_pages=4, page_size=16)
+    assert pool.evict_lru() is None
+    assert pool.lru_candidates() == []
+    pool.check_invariants()
+
+
+def test_evict_exclude_covers_all_seqs():
+    pool = PagedKVPool(num_pages=12, page_size=16)
+    for sid in (1, 2, 3):
+        pool.allocate(sid, 32)
+    assert pool.evict_lru(exclude={1, 2, 3}) is None
+    assert pool.lru_candidates(exclude={1, 2, 3}) == []
+    assert pool.used_pages == 6              # nothing was freed
+    # a partial exclude set still reports the rest in LRU order
+    assert pool.lru_candidates(exclude={2}) == [1, 3]
+    pool.check_invariants()
+
+
+def test_touch_reorders_eviction_order():
+    pool = PagedKVPool(num_pages=12, page_size=16)
+    for sid in (1, 2, 3):
+        pool.allocate(sid, 16)
+    assert pool.lru_candidates() == [1, 2, 3]
+    pool.touch(1)
+    pool.touch(2)
+    assert pool.lru_candidates() == [3, 1, 2]
+    assert pool.evict_lru() == 3
+    # allocate() touches too: seq 1 becomes MRU again
+    pool.allocate(1, 1)
+    assert pool.evict_lru() == 2
+    pool.check_invariants()
+
+
+def test_free_unknown_seq_is_noop():
+    pool = PagedKVPool(num_pages=4, page_size=16)
+    assert pool.free_seq(99) == 0
+    pool.check_invariants()
+
+
+def test_check_invariants_catches_corruption():
+    pool = PagedKVPool(num_pages=8, page_size=16)
+    pool.allocate(1, 32)
+    pool.seqs[1].pages.append(pool.seqs[1].pages[0])   # double-grant
+    with pytest.raises(AssertionError):
+        pool.check_invariants()
+    pool.seqs[1].pages.pop()
+    pool.check_invariants()
+    pool.seqs[1].tokens += 100                         # count mismatch
+    with pytest.raises(AssertionError):
+        pool.check_invariants()
+
+
 def test_from_bytes_sizing():
     kv_per_tok = 114_688                     # llama32-3b
     pool = PagedKVPool.from_bytes(28e9, kv_per_tok, page_size=16)

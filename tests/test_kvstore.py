@@ -1,0 +1,548 @@
+"""Invariant/fuzz layer for the tiered KV store + prefix-affinity router
+(DESIGN.md section 15).
+
+Three layers of lockdown:
+
+  1. Deterministic unit tests: spill/fetch/drop mechanics, pins, peek
+     purity, prefetch read-ahead, spec encodings.
+  2. Hypothesis fuzz: random op mixes x tier budgets x reuse mode x seed
+     must keep ``TieredKVStore.check_invariants`` green (no page resident
+     in two tiers, over-capacity only when fully pinned, pins positive
+     and resident), keep the movement ledger conservative (every fetch
+     from a tier is covered by earlier spills into it), keep every
+     priced leg re-derivable from ``core.transfer``, and keep hit rate
+     monotone in total capacity.
+  3. Cluster integration: the per-stage joules the EnergyMeter reports
+     (``tier-fetch`` / ``tier-spill``) reconcile EXACTLY against the
+     stores' ledgers; the fast stepper provably bails to exact when a
+     tiered store is attached; the prefix-affinity router is
+     byte-identical to least-outstanding-tokens on cold prefixes; and
+     every pre-PR spec hash survives bit-for-bit (constants pinned from
+     the pre-PR tree).
+
+``REPRO_KVSTORE_EXAMPLES`` turns the fuzz example count up in CI's
+reuse lane (100+); the default stays inside the tier-1 budget.
+"""
+import dataclasses
+import os
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
+
+from repro.configs import get_config
+from repro.core.fastpath import fast_decode_eligible
+from repro.core.orchestrator import run_setup
+from repro.core.transfer import DiskPath, HostPath
+from repro.fleet.cluster import FleetCluster
+from repro.fleet.router import POLICIES, Router
+from repro.fleet.spec import FleetSpec
+from repro.kvstore import (REUSE_MODES, ReuseSpec, TierSpec, TieredKVStore,
+                           as_reuse_spec, as_tier_spec)
+from repro.workload import (DEFAULT_INTERACTIVE_SLO, PaperFixedLengths,
+                            RAGSharedPrefixLengths, open_loop_workload)
+
+CFG = get_config("llama32-3b")
+PAGE_BYTES = 4096
+N_EXAMPLES = int(os.environ.get("REPRO_KVSTORE_EXAMPLES", "25"))
+
+
+def make_store(hbm=4, dram=8, disk=16, *, mode="prefix", prefetch=0,
+               page_size=4):
+    return TieredKVStore(
+        TierSpec(hbm_pages=hbm, dram_pages=dram, disk_pages=disk,
+                 prefetch_pages=prefetch),
+        mode=mode, page_size=page_size, page_bytes=PAGE_BYTES)
+
+
+def toks(seed, n):
+    return np.random.default_rng(seed).integers(0, 97, n)
+
+
+def audit_ledger(store):
+    """The movement ledger's own conservation laws.
+
+    * Every fetch from DRAM/disk is covered by earlier spills into that
+      tier (a fetch with nothing resident would be a read of KV never
+      written — "every fetch preceded by a store").
+    * Final ledger balance equals actual lower-tier residency.
+    * Every priced leg is exactly what core.transfer charges for that
+      byte count today (no stale/copied prices in the ledger).
+    """
+    resident = {"dram": 0, "disk": 0}
+    for ev in store.events:
+        if ev["op"] == "spill":
+            resident[ev["dst"]] += ev["pages"]
+            if ev["src"] in resident:
+                resident[ev["src"]] -= ev["pages"]
+        elif ev["op"] in ("fetch", "drop", "promote") \
+                and ev["src"] in resident:
+            resident[ev["src"]] -= ev["pages"]
+        assert resident["dram"] >= 0 and resident["disk"] >= 0, \
+            f"fetch/drop without a preceding store: {ev}"
+    assert resident["dram"] == len(store._tier["dram"])
+    assert resident["disk"] == len(store._tier["disk"])
+
+    for ev in store.events:
+        if ev["op"] == "spill":
+            leg = store._paths[ev["dst"]].store_cost(ev["nbytes"])
+        elif ev["op"] == "fetch":
+            leg = store._paths[ev["src"]].fetch_cost(ev["nbytes"])
+        else:
+            continue
+        assert ev["latency_s"] == leg.latency_s
+        assert ev["energy_j"] == leg.energy_j
+
+
+# ----------------------------------------------------------------------
+# spec encodings: pre-PR hashes must survive bit-for-bit
+# ----------------------------------------------------------------------
+def test_reuse_encode_omits_tiers_when_none():
+    d = ReuseSpec().encode()
+    # EXACTLY the pre-tier key set: adding a key would shift every
+    # cached reuse-spec hash
+    assert d == {"mode": "prefix", "capacity_pages": 200_000,
+                 "page_size": 16, "recompute_frac": 0.15, "warm": True}
+
+
+def test_reuse_encode_nests_tiers():
+    r = ReuseSpec(mode="pic", tiers={"hbm_pages": 8, "dram_pages": 16})
+    d = r.encode()
+    assert d["tiers"] == {"hbm_pages": 8, "dram_pages": 16,
+                          "disk_pages": 0, "prefetch_pages": 0}
+    assert r.tiers == TierSpec(8, 16)
+
+
+def test_as_reuse_spec_forms():
+    assert as_reuse_spec(None) is None
+    assert as_reuse_spec("pic") == ReuseSpec(mode="pic")
+    r = as_reuse_spec({"mode": "prefix", "tiers": {"hbm_pages": 2}})
+    assert r.tiers.hbm_pages == 2
+    assert as_reuse_spec(r) is r
+    with pytest.raises(TypeError):
+        as_reuse_spec(3.14)
+    with pytest.raises(TypeError):
+        as_tier_spec("hbm")
+
+
+def test_fleet_encode_omits_reuse_when_none():
+    from repro.exp.spec import encode_fleet
+    d = encode_fleet(FleetSpec(n_colocated=2))
+    assert "reuse" not in d and "controller" not in d
+    d2 = encode_fleet(FleetSpec(n_colocated=2, reuse="prefix"))
+    assert d2["reuse"]["mode"] == "prefix" and "tiers" not in d2["reuse"]
+
+
+def test_pre_pr_spec_hashes_pinned():
+    """Constants computed from the pre-PR tree (git HEAD at 71ece66):
+    the content-addressed result cache must keep hitting every record
+    written before tiers existed."""
+    from repro.exp import Experiment
+    e1 = Experiment.open("co-2gpus", 4.0, n=16,
+                         lengths=PaperFixedLengths(2048, 128), seed=3,
+                         slo=DEFAULT_INTERACTIVE_SLO)
+    e2 = Experiment.open(
+        FleetSpec(n_prefill=2, n_decode=2, medium="host",
+                  governor="queue-depth"), 8.0, n=8, seed=0)
+    e3 = Experiment.closed("dis-ici", 4, input_len=4096, output_len=64,
+                           reuse=ReuseSpec(mode="pic"))
+    assert e1.spec_hash() == ("d39e1c20e4d355bb6b11257f823b87ff"
+                              "41d9b89aa31cb068c9c7e3300de46e2b")
+    assert e2.spec_hash() == ("2c10c966d915aa9cafb9eefd398da56d"
+                              "7ac1ff6b4515b0ca71453c6dbfe75569")
+    assert e3.spec_hash() == ("3063d59978f37d8cf96d22d0b81fbe5a"
+                              "67d2a8673221dad9296cde27737a6863")
+
+
+def test_experiment_reuse_tiers_roundtrip():
+    from repro.exp import Experiment
+    e = Experiment.open("co-2gpus", 4.0, n=4,
+                        reuse={"mode": "prefix",
+                               "tiers": {"hbm_pages": 8, "dram_pages": 4}})
+    e2 = Experiment.from_json(e.to_json())
+    assert e2 == e and e2.reuse.tiers == TierSpec(8, 4)
+    assert e2.spec_hash() == e.spec_hash()
+
+
+# ----------------------------------------------------------------------
+# store mechanics (deterministic)
+# ----------------------------------------------------------------------
+def test_insert_overflows_down_the_hierarchy():
+    s = make_store(hbm=2, dram=3, disk=4)
+    spills = s.insert(toks(0, 10 * 4))           # 10 pages into hbm=2
+    assert [len(s._tier[t]) for t in ("hbm", "dram", "disk")] == [2, 3, 4]
+    assert s.resident_pages() == 9               # 10th page dropped
+    # every hop is priced: 8 demotions hbm->dram, then 5 dram->disk
+    assert len(spills) == 8 + 5
+    drops = [e for e in s.events if e["op"] == "drop"]
+    assert len(drops) == 1 and drops[0]["src"] == "disk"
+    s.check_invariants()
+    audit_ledger(s)
+
+
+def test_drop_when_lower_tiers_disabled():
+    s = make_store(hbm=2, dram=0, disk=0)
+    spills = s.insert(toks(0, 5 * 4))
+    assert spills == []                          # drops are free
+    assert len(s._tier["hbm"]) == 2 and s.resident_pages() == 2
+    assert sum(e["pages"] for e in s.events if e["op"] == "drop") == 3
+    audit_ledger(s)
+
+
+def test_lookup_fetches_batched_per_source_tier():
+    s = make_store(hbm=2, dram=8, disk=8)
+    t = toks(1, 6 * 4)
+    s.insert(t)                                  # 2 hbm, 4 dram
+    hit = s.lookup(t)
+    assert hit.matched_tokens == 24
+    assert len(hit.fetch_legs) == 1              # one batched dram leg
+    fetches = [e for e in s.events if e["op"] == "fetch"]
+    assert len(fetches) == 1 and fetches[0]["src"] == "dram"
+    assert fetches[0]["pages"] == 4
+    # priced exactly as the host-staging path for the batched bytes
+    want = HostPath(None).fetch_cost(4 * PAGE_BYTES)
+    assert hit.fetch_legs[0].energy_j == want.energy_j
+    assert hit.fetch_legs[0].latency_s == want.latency_s
+    s.release(hit.pins)
+    s.check_invariants()
+    audit_ledger(s)
+
+
+def test_disk_fetch_priced_by_disk_path():
+    s = make_store(hbm=1, dram=1, disk=16)
+    t = toks(2, 8 * 4)
+    s.insert(t)                                  # 1 hbm, 1 dram, 6 disk
+    hit = s.lookup(t)
+    srcs = {e["src"]: e for e in s.events if e["op"] == "fetch"}
+    assert set(srcs) == {"dram", "disk"}
+    assert srcs["disk"]["energy_j"] == \
+        DiskPath(None).fetch_cost(6 * PAGE_BYTES).energy_j
+    s.release(hit.pins)
+    audit_ledger(s)
+
+
+def test_pinned_pages_never_evicted():
+    s = make_store(hbm=2, dram=2, disk=0)
+    a = toks(3, 2 * 4)
+    s.insert(a)
+    hit = s.lookup(a)                            # pins both hbm pages
+    s.insert(toks(4, 4 * 4))                     # pressure: 4 new pages
+    for k in hit.pins:
+        assert s._where(k) == "hbm", "pinned page left HBM"
+    s.check_invariants()
+    # release -> the same pressure now evicts them
+    s.release(hit.pins)
+    s.insert(toks(5, 4 * 4))
+    assert all(s._where(k) != "hbm" for k in hit.pins)
+    s.check_invariants()
+    audit_ledger(s)
+
+
+def test_fully_pinned_tier_exceeds_capacity_not_evicts():
+    s = make_store(hbm=2, dram=2, disk=0)
+    a = toks(6, 4 * 4)
+    s.insert(a)                                  # 2 hbm + 2 dram
+    hit = s.lookup(a)                            # promotes + pins all 4
+    assert len(s._tier["hbm"]) == 4              # > cap: all pinned
+    s.check_invariants()                         # legal while pinned
+    spills = s.release(hit.pins)                 # pins off -> re-enforce
+    assert len(s._tier["hbm"]) == 2
+    assert len(spills) == 2                      # overflow demoted, priced
+    s.check_invariants()
+    audit_ledger(s)
+
+
+def test_peek_match_is_pure():
+    s = make_store(hbm=2, dram=8, disk=0)
+    t = toks(9, 5 * 4)
+    s.insert(t)
+    before = ({k: list(s._tier[k]) for k in s._tier}, dict(s._pins),
+              s.hits, s.misses, len(s.events))
+    assert s.peek_match(t) == 20
+    assert s.peek_match(toks(10, 4 * 4)) == 0
+    after = ({k: list(s._tier[k]) for k in s._tier}, dict(s._pins),
+             s.hits, s.misses, len(s.events))
+    assert before == after, "peek_match mutated the store"
+    # and it predicts exactly what lookup then reports
+    assert s.lookup(t).matched_tokens == 20
+
+
+def test_prefetch_drags_hot_leftovers():
+    s = make_store(hbm=1, dram=8, disk=0, prefetch=2)
+    t = toks(11, 6 * 4)
+    s.insert(t)                                  # 1 hbm (MRU), 5 dram
+    hit = s.lookup(t[:2 * 4])                    # demand: 2 dram pages
+    fetch = next(e for e in s.events if e["op"] == "fetch")
+    assert fetch["pages"] == 2 + 2               # demand + read-ahead
+    assert len(hit.fetch_legs) == 1              # same batched leg
+    s.release(hit.pins)
+    s.check_invariants()
+    audit_ledger(s)
+
+
+def test_pic_mode_matches_displaced_and_repairs():
+    s = make_store(hbm=8, dram=8, disk=0, mode="pic")
+    shared = toks(12, 3 * 4)
+    s.insert(np.concatenate([toks(13, 4), shared]))
+    hit = s.lookup(np.concatenate([toks(14, 4), shared]))
+    assert hit.matched_tokens == 12 and hit.mode == "pic"
+    assert hit.recompute_tokens == 4 + int(np.ceil(12 * 0.15))
+    # prefix mode on the same trace matches nothing (positions differ)
+    p = make_store(hbm=8, dram=8, disk=0, mode="prefix")
+    p.insert(np.concatenate([toks(13, 4), shared]))
+    assert p.lookup(np.concatenate([toks(14, 4), shared])).mode == "none"
+
+
+# ----------------------------------------------------------------------
+# hypothesis fuzz: invariants + ledger conservation under any op mix
+# ----------------------------------------------------------------------
+if HAS_HYPOTHESIS:
+    from hypothesis import HealthCheck
+
+    _ops = st.lists(
+        st.tuples(st.sampled_from(("insert", "lookup", "lookup_hold",
+                                   "release_all", "peek")),
+                  st.integers(0, 9),              # token-seed
+                  st.integers(1, 40)),            # token count
+        min_size=1, max_size=40)
+    _tiers = st.builds(
+        TierSpec,
+        st.integers(1, 6), st.integers(0, 8), st.integers(0, 8),
+        st.integers(0, 2))
+
+    @settings(max_examples=N_EXAMPLES, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(ops=_ops, tiers=_tiers, mode=st.sampled_from(REUSE_MODES),
+           seed=st.integers(0, 2 ** 16))
+    def test_store_invariants_fuzz(ops, tiers, mode, seed):
+        s = TieredKVStore(tiers, mode=mode, page_size=4,
+                          page_bytes=PAGE_BYTES)
+        rng = np.random.default_rng(seed)
+        held = []
+        for op, tseed, n in ops:
+            t = rng.integers(0, 31, n) if tseed == 0 else toks(tseed, n)
+            if op == "insert":
+                s.insert(t)
+            elif op == "lookup":
+                s.release(s.lookup(t).pins)
+            elif op == "lookup_hold":
+                held.append(s.lookup(t).pins)
+            elif op == "release_all":
+                for pins in held:
+                    s.release(pins)
+                held = []
+            else:
+                s.peek_match(t)
+            s.check_invariants()
+        audit_ledger(s)
+        for pins in held:
+            s.release(pins)
+        s.check_invariants()
+        # with every pin released, no tier may stay over capacity
+        s.insert(toks(99, 4))
+        for t in ("hbm", "dram", "disk"):
+            assert len(s._tier[t]) <= s.spec.capacity(t)
+
+    @settings(max_examples=N_EXAMPLES, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(trace=st.lists(st.tuples(st.integers(0, 7), st.integers(4, 32)),
+                          min_size=1, max_size=24),
+           probes=st.lists(st.tuples(st.integers(0, 7), st.integers(4, 32)),
+                           min_size=1, max_size=8),
+           mode=st.sampled_from(REUSE_MODES))
+    def test_hit_rate_monotone_in_capacity(trace, probes, mode):
+        """Global-recency inclusion: the same insert trace through a
+        ladder of growing total budgets leaves nested resident sets, so
+        every probe's matched-token count is non-decreasing in capacity.
+        (Probed with the pure ``peek_match`` so the probes themselves
+        cannot perturb residency.)"""
+        ladder = [TierSpec(1, 1, 0), TierSpec(2, 4, 0), TierSpec(2, 4, 8),
+                  TierSpec(4, 12, 16)]
+        rows = []
+        for tiers in ladder:
+            s = TieredKVStore(tiers, mode=mode, page_size=4,
+                              page_bytes=PAGE_BYTES)
+            for tseed, n in trace:
+                s.insert(toks(tseed, n))
+            s.check_invariants()
+            rows.append([s.peek_match(toks(tseed, n))
+                         for tseed, n in probes])
+        for small, big in zip(rows, rows[1:]):
+            for a, b in zip(small, big):
+                assert a <= b, (rows, trace, probes)
+else:  # pragma: no cover - container without the dev extra
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_store_invariants_fuzz():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_hit_rate_monotone_in_capacity():
+        pass
+
+
+# ----------------------------------------------------------------------
+# cluster integration: meter == ledger, bail rule, reuse engages
+# ----------------------------------------------------------------------
+TIERED = {"mode": "prefix", "page_size": 16,
+          "tiers": {"hbm_pages": 64, "dram_pages": 128, "disk_pages": 256}}
+RAG_WK = dict(rate=8.0, n=16, lengths=RAGSharedPrefixLengths(prefix_len=1024),
+              vocab_size=512, slo=DEFAULT_INTERACTIVE_SLO, seed=0)
+
+
+def test_tier_stage_joules_reconcile_with_ledger():
+    """The EnergyMeter's tier stages are EXACTLY the ledger, re-priced:
+    ``tier-spill`` is the summed spill-leg energy (async DMA, no
+    occupancy); ``tier-fetch`` is the summed fetch-leg energy plus the
+    engine idling at ``idle_power_w`` for the batched fetch latency."""
+    spec = FleetSpec(n_colocated=2, router="prefix-affinity", reuse=TIERED)
+    reqs = open_loop_workload(**RAG_WK)
+    cluster = FleetCluster(spec, CFG)
+    res = cluster.run(reqs, stepper="exact")
+    assert res.metrics.total_reused_tokens > 0, "reuse never engaged"
+
+    spill_j = fetch_j = fetch_lat = 0.0
+    for e in cluster.engines:
+        assert e.kv_store is not None
+        audit_ledger(e.kv_store)
+        for ev in e.kv_store.events:
+            tot = sum(ev["energy_j"].values())
+            if ev["op"] == "spill":
+                spill_j += tot
+            elif ev["op"] == "fetch":
+                fetch_j += tot
+                fetch_lat += ev["latency_s"]
+    assert spill_j > 0 and fetch_j > 0
+    idle_w = cluster.engines[0].cost.idle_power_w()
+    by_stage = res.energy.by_stage
+    assert by_stage["tier-spill"] == pytest.approx(spill_j, rel=1e-9)
+    assert by_stage["tier-fetch"] == pytest.approx(
+        fetch_j + idle_w * fetch_lat, rel=1e-9)
+    # fetch occupancy also lands in the power trace (stage-tagged)
+    assert any(s.stage == "tier-fetch"
+               for c in res.energy.trace.components
+               for s in res.energy.trace.samples[c])
+
+
+def test_fast_stepper_bails_to_exact_when_tiered(monkeypatch):
+    """The conservative rule, machine-checked at the call site: with a
+    tiered store attached, run(stepper="fast") must never enter the
+    coalescing window; flat reuse must still vectorize."""
+    import repro.fleet.cluster as fc
+    calls = []
+    real = fc.coalesce_window
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(fc, "coalesce_window", spy)
+    run_setup(FleetSpec(n_colocated=2, reuse=TIERED), CFG,
+              open_loop_workload(**RAG_WK), stepper="fast")
+    assert not calls, "fast stepper coalesced with a tiered store active"
+
+    run_setup(FleetSpec(n_colocated=2, reuse="prefix"), CFG,
+              open_loop_workload(**RAG_WK), stepper="fast")
+    assert calls, "flat reuse must stay fast-eligible"
+
+
+def test_fast_decode_eligible_rejects_kv_store():
+    e = SimpleNamespace(executor=None, kv_store=None, governor=None,
+                        pending_fetch=(), pending_tier_fetch=(),
+                        prefilling=(), waiting=(), running=[1],
+                        decode_queue=())
+    assert fast_decode_eligible(e)
+    e.kv_store = object()
+    assert not fast_decode_eligible(e)
+    e.kv_store = None
+    e.pending_tier_fetch = [object()]
+    assert not fast_decode_eligible(e)
+
+
+def test_tiered_fast_vs_exact_same_result():
+    """stepper="fast" with tiers bails internally, so both entry points
+    must produce bit-identical records."""
+    out = {}
+    for stepper in ("exact", "fast"):
+        reqs = open_loop_workload(**RAG_WK)
+        res = run_setup(FleetSpec(n_colocated=2, reuse=TIERED), CFG, reqs,
+                        stepper=stepper)
+        out[stepper] = res
+    a, b = out["exact"], out["fast"]
+    assert dataclasses.asdict(a.metrics) == dataclasses.asdict(b.metrics)
+    assert a.energy.joules == b.energy.joules
+
+
+# ----------------------------------------------------------------------
+# prefix-affinity router
+# ----------------------------------------------------------------------
+def _mock_engine(load, store=None):
+    return SimpleNamespace(outstanding_tokens=lambda load=load: load,
+                           kv_store=store, prefix_cache=None)
+
+
+def test_prefix_affinity_registered():
+    assert "prefix-affinity" in POLICIES
+
+
+def test_prefix_affinity_cold_is_byte_identical_to_lot():
+    """With no matches anywhere the score tuple degenerates to
+    (0, outstanding): identical argmin candidates, identical seeded
+    tie-breaks, identical pick sequence."""
+    loads = [5, 3, 3, 9, 3, 7, 3]
+    req = SimpleNamespace(prompt_tokens=toks(0, 64))
+    for probe in (None, req):
+        r_lot = Router([_mock_engine(v) for v in loads],
+                       "least-outstanding-tokens", seed=7)
+        r_aff = Router([_mock_engine(v) for v in loads],
+                       "prefix-affinity", seed=7)
+        picks_lot = [r_lot.pick(req=probe).outstanding_tokens()
+                     for _ in range(64)]
+        picks_aff = [r_aff.pick(req=probe).outstanding_tokens()
+                     for _ in range(64)]
+        assert picks_lot == picks_aff
+
+
+def test_prefix_affinity_routes_to_warm_engine():
+    warm = make_store(hbm=64, dram=64, disk=0, page_size=16)
+    prompt = toks(1, 40 * 16)
+    warm.insert(prompt)
+    engines = [_mock_engine(1000, None), _mock_engine(4000, warm)]
+    r = Router(engines, "prefix-affinity", seed=0)
+    # loaded-but-warm beats idle-but-cold...
+    assert r.pick(req=SimpleNamespace(prompt_tokens=prompt)) is engines[1]
+    # ...and cold requests fall back to least-outstanding
+    assert r.pick(req=SimpleNamespace(prompt_tokens=toks(2, 64))) \
+        is engines[0]
+    assert r.pick(req=None) is engines[0]
+
+
+def test_prefix_affinity_no_reuse_full_run_identical():
+    """End-to-end: without any reuse spec the prefix-affinity fleet is
+    byte-identical to the least-outstanding-tokens fleet."""
+    wk = dict(rate=8.0, n=16, lengths=PaperFixedLengths(2048, 128), seed=1)
+    for shape in (dict(n_colocated=3),
+                  dict(n_prefill=2, n_decode=2, medium="ici")):
+        out = {}
+        for router in ("least-outstanding-tokens", "prefix-affinity"):
+            reqs = open_loop_workload(**wk)
+            out[router] = run_setup(FleetSpec(router=router, **shape),
+                                    CFG, reqs)
+        a, b = out.values()
+        assert dataclasses.asdict(a.metrics) == dataclasses.asdict(b.metrics)
+        assert a.energy.joules == b.energy.joules
+
+
+def test_affinity_beats_lot_on_shared_prefix_fleet():
+    """The point of the policy: on a RAG workload over a tiered fleet,
+    affinity routing must reuse at least as many tokens as blind LOT."""
+    reused = {}
+    for router in ("least-outstanding-tokens", "prefix-affinity"):
+        reqs = open_loop_workload(**RAG_WK)
+        res = run_setup(
+            FleetSpec(n_colocated=2, router=router, reuse=TIERED),
+            CFG, reqs, stepper="exact")
+        reused[router] = res.metrics.total_reused_tokens
+    assert reused["prefix-affinity"] >= reused["least-outstanding-tokens"]
+    assert reused["prefix-affinity"] > 0

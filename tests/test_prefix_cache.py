@@ -1,9 +1,14 @@
 """Prefix matching + position-independent caching (paper section II-C)."""
+import json
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 
-from repro.core.prefix_cache import PrefixCache
+from repro.core.prefix_cache import PrefixCache, _page_hash
 
 
 def test_exact_prefix_match():
@@ -80,3 +85,58 @@ def test_lookup_never_exceeds_input(tokens):
     r = c.lookup(tokens)
     assert r.matched_tokens <= len(tokens)
     assert r.recompute_tokens >= 0
+
+
+# ----------------------------------------------------------------------
+# stable hashing: page keys must not depend on PYTHONHASHSEED
+# ----------------------------------------------------------------------
+def test_page_hash_pinned_values():
+    """blake2b digests, pinned: any change to the key derivation silently
+    invalidates every cross-process residency comparison (the tiered
+    store's ledger, the prefix-affinity router's peek scores)."""
+    assert _page_hash(np.arange(16)) == -3027613264856255669
+    assert _page_hash(np.arange(16), salt=7) == -8714504233280175492
+    assert _page_hash(np.arange(16)) != _page_hash(np.arange(1, 17))
+
+
+_HASHSEED_SCRIPT = """
+import json
+import numpy as np
+from repro.core.prefix_cache import PrefixCache, _page_hash
+
+rng = np.random.default_rng(0)
+out = {"page_hash": _page_hash(np.arange(16))}
+for pic in (False, True):
+    c = PrefixCache(capacity_pages=8, page_size=4, pic=pic,
+                    recompute_frac=0.25)
+    rows = []
+    for i in range(12):
+        t = rng.integers(0, 13, rng.integers(4, 40))
+        c.insert(t)
+        probe = np.concatenate([t, rng.integers(0, 13, 8)]) \\
+            if i % 2 else rng.integers(0, 13, rng.integers(4, 40))
+        r = c.lookup(probe)
+        rows.append([r.matched_tokens, r.recompute_tokens, r.mode])
+    out[f"pic={pic}"] = {"rows": rows, "hits": c.hits, "misses": c.misses}
+print(json.dumps(out, sort_keys=True))
+"""
+
+
+def test_hit_stats_identical_across_hash_seeds():
+    """Regression for the builtin-``hash`` page keys: with process-salted
+    hashing, two processes disagreed on which pages were "the same", so
+    hit statistics depended on PYTHONHASHSEED. The blake2b keys must
+    give byte-identical lookup stats under different seeds."""
+    outs = []
+    for seed in ("0", "12345"):
+        env = dict(os.environ, PYTHONHASHSEED=seed,
+                   PYTHONPATH=os.path.join(os.path.dirname(__file__),
+                                           os.pardir, "src"))
+        proc = subprocess.run([sys.executable, "-c", _HASHSEED_SCRIPT],
+                              capture_output=True, text=True, env=env,
+                              check=True)
+        outs.append(proc.stdout)
+    assert outs[0] == outs[1]
+    stats = json.loads(outs[0])
+    assert stats["page_hash"] == -3027613264856255669
+    assert stats["pic=True"]["hits"] > 0     # the probe actually matched
