@@ -12,6 +12,11 @@ dis-disk typically never crosses.
 
   python -m benchmarks.fig6_load_crossover            # full grid
   python -m benchmarks.fig6_load_crossover --smoke    # CI: tiny grid + JSON
+  ... --trace   # also run one traced simulation per setup at the lowest
+                # rate, exporting Perfetto traces (fig6_trace_<setup>.json)
+                # and the per-setup SLO blame table (fig6_slo_blame.json)
+                # that machine-checks the narrative: below the crossover,
+                # dis violations are transfer+queue dominated
 """
 from __future__ import annotations
 
@@ -26,9 +31,72 @@ DIS_SETUPS = ("dis-ici", "dis-host", "dis-disk")
 DEFAULT_SLO = DEFAULT_INTERACTIVE_SLO
 
 
+def run_traced(arch: str, *, rate: float, n: int, slo: SLO, seed: int,
+               setups=("co-2gpus",) + DIS_SETUPS):
+    """One traced simulation per setup at ``rate`` (the below-crossover
+    regime): exports a Perfetto-loadable trace per setup plus the
+    aggregated SLO blame table. Traced runs are purely observational —
+    the goodput numbers match the untraced grid cells bit-for-bit."""
+    from repro.core.orchestrator import make_cluster
+    from repro.obs import (Tracer, assert_complete_lifecycles,
+                           attribute_run, blame_table, chrome_trace,
+                           transfer_queue_share, validate_chrome_trace)
+    from repro.workload import open_loop_workload
+
+    cfg = get_config(arch)
+    blame = {"arch": arch, "rate_rps": rate, "n_requests": n,
+             "seed": seed,
+             "slo": {"ttft_s": slo.ttft_s, "tpot_s": slo.tpot_s},
+             "setups": {}}
+    for setup in setups:
+        reqs = open_loop_workload(rate, n, slo=slo, seed=seed)
+        tracer = Tracer()
+        cluster = make_cluster(setup, cfg, tracer=tracer)
+        cluster.run(reqs)
+        trace = chrome_trace(tracer, label=f"fig6 {setup} @ {rate} rps")
+        validate_chrome_trace(trace)
+        assert_complete_lifecycles(trace, n_requests=n)
+        common.write_json(trace, f"fig6_trace_{setup}.json")
+        table = blame_table(attribute_run(reqs, slo, tracer))
+        table["transfer_queue_share_overall"] = transfer_queue_share(table)
+        blame["setups"][setup] = table
+        share = table["transfer_queue_share_overall"]
+        print(f"trace {setup}: {len(tracer.events)} events, "
+              f"{table['violations']} SLO violations, "
+              f"transfer+queue share "
+              f"{'n/a' if share is None else f'{share:.2f}'}")
+    common.write_json(blame, "fig6_slo_blame.json")
+    return blame
+
+
+def check_blame_claim(blame: dict) -> None:
+    """Machine-check of the fig6 narrative on a blame table produced
+    below the crossover: every dis setup WITH violations loses its SLO
+    budget to transfer+queue terms (share > 0.5, with at least one such
+    setup present — dis-disk at any sane rate), while colocated
+    violations, if any, are compute-bound (share < 0.5)."""
+    dis_with_viol = [s for s in DIS_SETUPS
+                     if blame["setups"].get(s, {}).get("violations")]
+    assert dis_with_viol, (
+        "fig6 claim unverifiable: no dis setup has SLO violations at "
+        f"rate {blame['rate_rps']} — lower the SLO or raise the rate")
+    for s in dis_with_viol:
+        share = blame["setups"][s]["transfer_queue_share_overall"]
+        assert share is not None and share > 0.5, (
+            f"{s}: transfer+queue share {share} <= 0.5 — dis violations "
+            "are not transfer+queue dominated below the crossover")
+    co = blame["setups"].get("co-2gpus", {})
+    if co.get("violations"):
+        share = co["transfer_queue_share_overall"]
+        assert share is not None and share < 0.5, (
+            f"co-2gpus: transfer+queue share {share} >= 0.5 — colocated "
+            "violations should be compute (interference) dominated")
+
+
 def run(arch: str = common.DEFAULT_ARCH, *, rates=None,
         n: int = common.OPEN_LOOP_N,
-        slo: SLO = DEFAULT_SLO, smoke: bool = False, seed: int = 0):
+        slo: SLO = DEFAULT_SLO, smoke: bool = False, seed: int = 0,
+        trace: bool = False):
     cfg = get_config(arch)
     if rates is None:
         rates = (1.0, 2.0, 4.0) if smoke else (1.0, 2.0, 3.0, 4.0, 6.0,
@@ -75,6 +143,16 @@ def run(arch: str = common.DEFAULT_ARCH, *, rates=None,
         "crossovers": crossovers,
     }
     common.write_json(payload, "fig6_load_crossover.json")
+
+    if trace:
+        # traced pass at the lowest rate — the below-crossover regime
+        # where the blame table must show dis violations losing their
+        # budget to transfer+queue, not compute
+        blame = run_traced(arch, rate=lo, n=n, slo=slo, seed=seed)
+        check_blame_claim(blame)
+        print("fig6 blame claim holds: dis violations below the "
+              "crossover are transfer+queue dominated")
+        payload["slo_blame"] = blame
     return payload
 
 
@@ -85,10 +163,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny grid for CI; emits the same JSON artifact")
+    ap.add_argument("--trace", action="store_true",
+                    help="also export Perfetto traces + the SLO blame "
+                         "table at the lowest rate, and machine-check "
+                         "the fig6 narrative on it")
     args = ap.parse_args(argv)
     run(args.arch, rates=args.rate, n=args.requests,
         slo=SLO(ttft_s=args.ttft_slo, tpot_s=args.tpot_slo),
-        smoke=args.smoke, seed=args.seed)
+        smoke=args.smoke, seed=args.seed, trace=args.trace)
     return 0
 
 

@@ -88,6 +88,7 @@ def time_scenario(name: str, stepper: str, reps: int) -> Dict:
     spec, wk = SCENARIOS[name]
     cfg = get_config(ARCH)
     best_s, steps = float("inf"), 0
+    fastpath = {}
     for _ in range(reps):
         requests = open_loop_workload(**wk)
         t0 = time.perf_counter()
@@ -97,8 +98,17 @@ def time_scenario(name: str, stepper: str, reps: int) -> Dict:
         if elapsed < best_s:
             best_s = elapsed
             steps = sum(e.steps for e in cluster.engines)
+            # coalescing stats make a speedup regression diagnosable:
+            # a dropped ratio with an unchanged coalesced fraction is a
+            # constant-factor slowdown; a dropped fraction means runs
+            # stopped being eligible (ISSUE 9 satellite 2). Identical
+            # across reps (deterministic), recorded from the best one.
+            fastpath = dict(cluster.fastpath_stats)
+            fastpath["coalesced_step_fraction"] = round(
+                fastpath["coalesced_step_fraction"], 4)
     return {"wall_s": round(best_s, 6), "engine_steps": steps,
-            "events_per_s": round(steps / best_s, 1)}
+            "events_per_s": round(steps / best_s, 1),
+            "fastpath": fastpath}
 
 
 def measure(reps: int) -> Dict:

@@ -5,6 +5,8 @@ per-stage idle/active energy breakdown from the fig8 governor JSON.
       --write-experiments
   PYTHONPATH=src python -m benchmarks.report \
       --energy-json benchmarks/out/fig8_governor_pareto.json
+  PYTHONPATH=src python -m benchmarks.report \
+      --trace benchmarks/out/fig6_trace_dis-disk.json
 """
 from __future__ import annotations
 
@@ -124,8 +126,18 @@ def main(argv=None):
     ap.add_argument("--energy-json", default=None,
                     help="fig8 governor JSON: print the per-stage "
                          "idle/active energy breakdown instead")
+    ap.add_argument("--trace", default=None,
+                    help="exported Chrome trace JSON (fig6_trace_*.json "
+                         "or examples/trace_run.py output): print the "
+                         "text Gantt summary instead")
     ap.add_argument("--write-experiments", action="store_true")
     args = ap.parse_args(argv)
+    if args.trace:
+        # lazy import: every other report mode works without PYTHONPATH
+        from repro.obs.export import text_summary
+        with open(args.trace) as f:
+            print(text_summary(json.load(f)))
+        return
     if args.energy_json:
         with open(args.energy_json) as f:
             print(energy_table(json.load(f)))

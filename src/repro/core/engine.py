@@ -34,6 +34,7 @@ from .costs import CostModel, StepCost
 from .energy import EnergyMeter
 from .kvcache import OutOfPages, PagedKVPool
 from .request import Request
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclass(eq=False)
@@ -82,6 +83,10 @@ class Engine:
         # invoked at the top of every scheduler step. None = no retuning
         # (identical to the default StaticGovernor).
         self.governor = None
+        # observability sink (repro.obs, DESIGN.md section 16): the
+        # cluster installs a live Tracer; the default is the no-op
+        # NULL_TRACER, so every hook below costs one attribute read
+        self.tracer = NULL_TRACER
         self.on_prefill_done = on_prefill_done   # (engine, seq, t) -> None
         # KV reuse (paper section II-C): prefill work for matched tokens is
         # skipped. Simulation-only — in real mode the matched KV bytes are
@@ -140,6 +145,8 @@ class Engine:
             self.t = max(self.t, req.arrival_s)
         seq = EngineSeq(req=req, prefill_target=req.prompt_len)
         if self.kv_store is not None and req.prompt_tokens is not None:
+            if self.tracer.enabled:
+                self.kv_store.now = self.t   # clock for tier instants
             hit = self.kv_store.lookup(req.prompt_tokens)
             seq.tier_hit = hit
             saved = hit.saved_tokens(req.prompt_len)
@@ -224,6 +231,10 @@ class Engine:
                 self.waiting.pop(i)
                 if seq.req.prefill_start_s is None:
                     seq.req.prefill_start_s = self.t
+                    if self.tracer.enabled:
+                        self.tracer.lifecycle("prefill_start",
+                                              seq.req.req_id, self.t,
+                                              engine=self.name)
                 if seq.tier_hit is not None and not seq.tier_charged \
                         and (seq.tier_hit.fetch_legs
                              or seq.tier_hit.spill_legs):
@@ -281,9 +292,12 @@ class Engine:
         util = cost.utilization(self.phi)
         self.meter.add_power(self.name, self.cost.power_w(self.phi, util),
                              dt, stage=stage, t0=self.t)
+        t0 = self.t
         self.t += dt
         self.busy_s += dt
         self.steps += 1
+        if self.tracer.enabled:
+            self.tracer.span(self.name, stage, t0, self.t, steps=1)
         return self.t
 
     # ------------------------------------------------------------------
@@ -301,8 +315,14 @@ class Engine:
         self.meter.add_power(self.name, self.cost.idle_power_w(),
                              leg.latency_s, stage="transfer-fetch",
                              t0=self.t)
+        t0 = self.t
         self.t += leg.latency_s
         self.busy_s += leg.latency_s
+        if self.tracer.enabled:
+            self.tracer.span(self.name, "transfer-fetch", t0, self.t,
+                             steps=0, req=seq.req.req_id)
+            self.tracer.lifecycle("fetch_start", seq.req.req_id, t0,
+                                  engine=self.name)
         if self.executor is not None and handle is not None:
             seq.state, seq.last_logits = self.executor.fetch(handle)
         if seq.req.decode_start_s is None:
@@ -315,10 +335,16 @@ class Engine:
             seq.req.generated = 1
             if seq.next_token is not None:
                 seq.req.output_tokens.append(int(seq.next_token))
+            if self.tracer.enabled:
+                self.tracer.lifecycle("first_token", seq.req.req_id,
+                                      self.t, engine=self.name)
         if seq.req.generated >= seq.req.output_len:
             # single-token outputs finish at the first token
             seq.req.finish_s = self.t
             self.pool.free_seq(seq.seq_id)
+            if self.tracer.enabled:
+                self.tracer.lifecycle("finish", seq.req.req_id, self.t,
+                                      engine=self.name)
         else:
             self.running.append(seq)
         return self.t
@@ -345,8 +371,12 @@ class Engine:
         if latency > 0.0:
             self.meter.add_power(self.name, self.cost.idle_power_w(),
                                  latency, stage="tier-fetch", t0=self.t)
+            t0 = self.t
             self.t += latency
             self.busy_s += latency
+            if self.tracer.enabled:
+                self.tracer.span(self.name, "tier-fetch", t0, self.t,
+                                 steps=0, req=seq.req.req_id)
         return self.t
 
     # ------------------------------------------------------------------
@@ -367,6 +397,9 @@ class Engine:
     def _preempt(self, seq: EngineSeq) -> None:
         self.pool.free_seq(seq.seq_id)
         self.preemptions += 1
+        if self.tracer.enabled:
+            self.tracer.instant(self.name, "preempt", self.t,
+                                req=seq.req.req_id)
         if seq in self.running:
             self.running.remove(seq)
             seq.req.evictions += 1
@@ -437,6 +470,11 @@ class Engine:
             if seq.prefill_done >= seq.prefill_target:
                 self.prefilling.remove(seq)
                 seq.req.prefill_done_s = t_end
+                if self.tracer.enabled:
+                    self.tracer.lifecycle("prefill_done", seq.req.req_id,
+                                          t_end, engine=self.name)
+                    if self.kv_store is not None:
+                        self.kv_store.now = t_end
                 self.pool.touch(seq.seq_id)
                 if self.kv_store is not None and \
                         seq.req.prompt_tokens is not None:
@@ -463,10 +501,18 @@ class Engine:
                         seq.req.generated = 1
                         if seq.next_token is not None:
                             seq.req.output_tokens.append(int(seq.next_token))
+                        if self.tracer.enabled:
+                            self.tracer.lifecycle(
+                                "first_token", seq.req.req_id, t_end,
+                                engine=self.name)
                     if seq.req.generated >= seq.req.output_len:
                         # single-token outputs finish at the first token
                         seq.req.finish_s = t_end
                         self.pool.free_seq(seq.seq_id)
+                        if self.tracer.enabled:
+                            self.tracer.lifecycle(
+                                "finish", seq.req.req_id, t_end,
+                                engine=self.name)
                     else:
                         self.running.append(seq)
                 else:
@@ -505,6 +551,9 @@ class Engine:
                 seq.req.finish_s = t_end
                 self.pool.free_seq(seq.seq_id)
                 self.running.remove(seq)
+                if self.tracer.enabled:
+                    self.tracer.lifecycle("finish", seq.req.req_id,
+                                          t_end, engine=self.name)
         return True
 
 

@@ -199,6 +199,11 @@ def _consume(e, rc: RunCache, t_event: Optional[float],
     e.busy_s = float(rc.bcum[hi])
     e.steps += n
     rc.j = hi
+    if e.tracer.enabled:
+        # one window-level span carrying the step count, where the
+        # exact stepper emits n unit spans back to back — identical
+        # after Tracer.coalesced() (the window-span contract, s16)
+        e.tracer.span(e.name, "decode", float(rc.tcum[j]), e.t, steps=n)
     return n
 
 
@@ -223,6 +228,9 @@ def _apply(e, rc: RunCache, n: int) -> None:
             s.req.finish_s = t_end
             pool.free_seq(s.seq_id)
             e.running.remove(s)
+            if e.tracer.enabled:
+                e.tracer.lifecycle("finish", s.req.req_id, t_end,
+                                   engine=e.name)
         else:
             pool.touch(s.seq_id)
 

@@ -87,6 +87,11 @@ class RunRecord:
     # run); additive with a default, so pre-controller cached records
     # deserialize unchanged
     controller_actions: int = 0
+    # observability snapshot (repro.obs.metrics.MetricsRegistry
+    # .snapshot()): latency histograms, fastpath coalescing stats, tier
+    # hit rates, router decision counts. Additive with a default — the
+    # same no-bump contract as controller_actions
+    obs: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------------
     @property
@@ -138,7 +143,8 @@ class RunRecord:
     @classmethod
     def from_result(cls, exp, result, *, governor_decisions: int = 0,
                     controller_actions: int = 0,
-                    requests: Optional[List] = None) -> "RunRecord":
+                    requests: Optional[List] = None,
+                    obs: Optional[Dict[str, Any]] = None) -> "RunRecord":
         """Build the record from a finished ``SetupResult``; when the
         experiment carries an SLO the goodput block is scored with it
         (same arithmetic as ``repro.workload.evaluate``)."""
@@ -160,4 +166,4 @@ class RunRecord:
                    total_tokens=result.total_tokens,
                    governor_decisions=governor_decisions,
                    controller_actions=controller_actions,
-                   goodput=goodput)
+                   goodput=goodput, obs=obs)

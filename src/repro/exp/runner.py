@@ -76,11 +76,14 @@ def _resolve_cache(cache) -> Optional[ResultCache]:
 
 
 # ----------------------------------------------------------------------
-def simulate(exp: Experiment, *, executor_factory=None) -> RunRecord:
+def simulate(exp: Experiment, *, executor_factory=None,
+             tracer=None) -> RunRecord:
     """One uncached simulation of a cell. ``executor_factory`` switches
     the engines to real execution (launch.serve --real); real runs are
     never cached — the record schema captures the simulation aggregate,
-    not token streams."""
+    not token streams. ``tracer`` (a ``repro.obs.Tracer``) records the
+    run's full event stream; it is purely observational, so the record
+    is bit-identical with or without it."""
     global SIM_COUNT
     SIM_COUNT += 1
     from repro.fleet.cluster import FleetCluster
@@ -88,7 +91,8 @@ def simulate(exp: Experiment, *, executor_factory=None) -> RunRecord:
     reqs = exp.workload.build(exp.slo)
     cluster = FleetCluster(
         exp.fleet, cfg, prefill_token_budget=exp.prefill_token_budget,
-        page_size=exp.page_size, executor_factory=executor_factory)
+        page_size=exp.page_size, executor_factory=executor_factory,
+        tracer=tracer)
     if exp.reuse is not None and exp.reuse.tiers is None:
         # flat shared reuse: this pre-tier branch is kept VERBATIM so
         # cached reuse_bench results replay bit-identical
@@ -109,20 +113,25 @@ def simulate(exp: Experiment, *, executor_factory=None) -> RunRecord:
     decisions = sum(len(e.governor.decisions) for e in cluster.engines
                     if e.governor is not None)
     actions = len(getattr(cluster, "controller_log", []) or [])
+    from repro.obs.metrics import collect_run_metrics
+    obs = collect_run_metrics(cluster, reqs).snapshot()
     return RunRecord.from_result(exp, result,
                                  governor_decisions=decisions,
                                  controller_actions=actions,
-                                 requests=reqs)
+                                 requests=reqs, obs=obs)
 
 
 def run(exp: Experiment, *, cache=_NO_CACHE,
-        force: bool = False, executor_factory=None) -> RunRecord:
+        force: bool = False, executor_factory=None,
+        tracer=None) -> RunRecord:
     """The memoized driver: cache hit -> stored record; miss ->
     simulate + store. ``cache=None`` bypasses the cache entirely;
     ``force=True`` re-simulates and overwrites. Real-execution runs
-    (``executor_factory``) are always uncached."""
-    if executor_factory is not None:
-        return simulate(exp, executor_factory=executor_factory)
+    (``executor_factory``) and traced runs (``tracer``) are always
+    uncached — a hit would leave the tracer empty."""
+    if executor_factory is not None or tracer is not None:
+        return simulate(exp, executor_factory=executor_factory,
+                        tracer=tracer)
     cache = _resolve_cache(cache)
     if cache is not None and not force:
         rec = cache.get(exp)

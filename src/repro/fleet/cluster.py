@@ -36,6 +36,9 @@ from repro.core.transfer import LegCost, TransferPath, make_path
 from repro.govern import make_governor
 from repro.kvstore import ReuseSpec, TieredKVStore, as_reuse_spec
 from repro.govern.telemetry import ABSENT, IDLE, SLEEP, PowerTrace
+from repro.obs.trace import (NULL_TRACER, Tracer,
+                             controller_action_from_event,
+                             event_from_controller_action)
 
 from .controller import make_controller
 from .router import Router
@@ -79,7 +82,8 @@ class FleetCluster:
                  prefill_token_budget: int = 8192,
                  pool_bytes: Optional[float] = None,
                  executor_factory: Optional[Callable[
-                     [Optional[TransferPath]], RealExecutor]] = None):
+                     [Optional[TransferPath]], RealExecutor]] = None,
+                 tracer: Optional[Tracer] = None):
         spec = as_fleet_spec(spec)
         if phi is not None or phi_prefill is not None \
                 or phi_decode is not None:
@@ -104,6 +108,14 @@ class FleetCluster:
         # trace is observational — joule totals use the same call
         # sequence with or without it, so parity goldens stay bit-exact
         self.meter = EnergyMeter(trace=PowerTrace())
+        # observability (repro.obs, DESIGN.md section 16): the tracer is
+        # observational too — on or off, every simulated quantity is
+        # bit-identical (tests/test_obs.py parity axis)
+        self.tracer = tracer or NULL_TRACER
+        # fastpath coalescing stats (window count / steps coalesced),
+        # maintained by _run_loop; exact runs leave both at 0
+        self.coalesce_windows = 0
+        self.coalesced_steps = 0
         pool_bytes = pool_bytes or self.acc.kv_pool_gb * 1e9
         kv_per_tok = max(self.cost.kv_bytes_per_token, 1)
 
@@ -169,6 +181,9 @@ class FleetCluster:
                                                spec.governors)):
             eng.governor = make_governor(gname,
                                          seed=spec.seed + 1000 + idx)
+
+        for eng in self.engines:
+            eng.tracer = self.tracer
 
         # legacy attribute: the single transfer path of a 1P:1D fleet
         self.path: Optional[TransferPath] = self.paths.get((0, 0)) \
@@ -263,6 +278,7 @@ class FleetCluster:
                     r.tiers, mode=r.mode, page_size=r.page_size,
                     recompute_frac=r.recompute_frac,
                     page_bytes=page_bytes, host=self.host)
+                e.kv_store.tracer = self.tracer
 
     @property
     def tiered(self) -> bool:
@@ -270,6 +286,17 @@ class FleetCluster:
         signal (checked on engines, not the spec, so tests attaching
         stores directly are covered too)."""
         return any(e.kv_store is not None for e in self.engines)
+
+    @property
+    def fastpath_stats(self) -> Dict[str, Union[int, float]]:
+        """End-of-run coalescing summary: window count, steps coalesced,
+        and the coalesced fraction of all engine steps (diagnosability
+        companion to the perf lane's speedup numbers)."""
+        total = sum(e.steps for e in self.engines)
+        return {"windows": self.coalesce_windows,
+                "coalesced_steps": self.coalesced_steps,
+                "coalesced_step_fraction":
+                    self.coalesced_steps / total if total else 0.0}
 
     def _warm_stores(self, requests: List[Request]) -> None:
         """``ReuseSpec.warm``: pre-insert request 0's prompt before the
@@ -327,6 +354,11 @@ class FleetCluster:
         role's prompt+output reservation discipline."""
         engine.pool.free_seq(seq.seq_id)
         seq.req.transfer_done_s = t
+        if self.tracer.enabled:
+            self.tracer.lifecycle("transfer_start", seq.req.req_id, t,
+                                  src=engine.name, dst=engine.name)
+            self.tracer.lifecycle("transfer_done", seq.req.req_id, t,
+                                  src=engine.name, dst=engine.name)
         engine.t = max(engine.t, t)
         engine.enqueue_decode(seq, None, LegCost(0.0))
 
@@ -353,6 +385,15 @@ class FleetCluster:
 
         t_arrive = t_done + store.latency_s
         seq.req.transfer_done_s = t_arrive
+        if self.tracer.enabled:
+            self.tracer.lifecycle("transfer_start", seq.req.req_id,
+                                  t_done, src=engine.name, dst=dec.name)
+            self.tracer.lifecycle("transfer_done", seq.req.req_id,
+                                  t_arrive, src=engine.name,
+                                  dst=dec.name)
+            self.tracer.span(f"xfer:{engine.name}->{dec.name}",
+                             "kv-store", t_done, t_arrive,
+                             req=seq.req.req_id, nbytes=int(nbytes))
         reserve = seq.ctx + (seq.req.output_len - seq.req.generated) + 1
         inflight = dec.pool.pages_for(reserve)
         dec.inflight_kv_pages += inflight
@@ -387,11 +428,16 @@ class FleetCluster:
 
     def _on_arrival(self, r: Request) -> None:
         self._pending_arrivals -= 1
+        if self.tracer.enabled:
+            self.tracer.lifecycle("arrival", r.req_id, r.arrival_s)
         eng = self.frontend.pick(req=r)
         if eng is None:     # controller-active and nothing accepting
             self._parked_requests.append(r)
             self._provide("prefill", r.arrival_s)
             return
+        if self.tracer.enabled:
+            self.tracer.lifecycle("routed", r.req_id, r.arrival_s,
+                                  engine=eng.name)
         eng.submit(r)
 
     # ------------------------------------------------------------------
@@ -422,8 +468,14 @@ class FleetCluster:
         lc.append((max(t, lc[-1][0]), state))
 
     def _log(self, t: float, op: str, e: Engine, **kw) -> None:
-        self.controller_log.append(
+        # the obs TraceEvent is the canonical record; the legacy dict
+        # shape consumers subscript (entry["op"], ...) is derived from
+        # it — one schema, two views (ISSUE 9 satellite 1)
+        ev = event_from_controller_action(
             dict(t=round(float(t), 9), op=op, engine=e.name, **kw))
+        if self.tracer.enabled:
+            self.tracer.events.append(ev)
+        self.controller_log.append(controller_action_from_event(ev))
 
     def _apply_initial_awake(self) -> None:
         """Engines beyond the controller's initial_awake_* counts start
@@ -563,6 +615,9 @@ class FleetCluster:
             if eng is None:
                 still_r.append(r)
             else:
+                if self.tracer.enabled:
+                    self.tracer.lifecycle("routed", r.req_id, t,
+                                          engine=eng.name)
                 eng.submit(r)
         self._parked_requests = still_r
         still_t: List[Tuple[Engine, EngineSeq, float]] = []
@@ -685,9 +740,12 @@ class FleetCluster:
                     fn()
                     stalled.clear()
                     continue
-                if fast and coalesce_window(candidates, order,
-                                            t_next_event):
-                    continue
+                if fast:
+                    n = coalesce_window(candidates, order, t_next_event)
+                    if n:
+                        self.coalesce_windows += 1
+                        self.coalesced_steps += n
+                        continue
                 if eng.step():
                     # a settling engine may complete a pending drain
                     # (sleep or flip), which can free parked work

@@ -45,7 +45,7 @@ same tie-break sequence, bit-identical metrics.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -223,15 +223,25 @@ class Router:
         self.policy = make_policy(policy)
         self._rng = np.random.default_rng(seed)
         self.accept = accept
+        # routing-decision counts per target engine (repro.obs reads
+        # this into the metrics registry at end of run)
+        self.picks: Dict[str, int] = {}
 
     def pick(self, req=None) -> Optional[Engine]:
         if self.accept is None:
             if len(self.engines) == 1:   # the 1P:1D / co-1gpu fast path
-                return self.engines[0]
-            return self.policy.select(self.engines, self._rng, req=req)
-        cands = [e for e in self.engines if self.accept(e)]
-        if not cands:
-            return None
-        if len(cands) == 1:
-            return cands[0]
-        return self.policy.select(cands, self._rng, req=req)
+                e = self.engines[0]
+            else:
+                e = self.policy.select(self.engines, self._rng, req=req)
+        else:
+            cands = [e for e in self.engines if self.accept(e)]
+            if not cands:
+                return None
+            if len(cands) == 1:
+                e = cands[0]
+            else:
+                e = self.policy.select(cands, self._rng, req=req)
+        key = getattr(e, "name", None)
+        if key is not None:          # duck-typed test engines may lack it
+            self.picks[key] = self.picks.get(key, 0) + 1
+        return e

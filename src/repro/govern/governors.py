@@ -71,6 +71,15 @@ class Governor:
             self.decisions.append(GovernorDecision(
                 t=engine.t, engine=engine.name, phi=phi, signal=signal))
             engine.phi = phi
+            tr = getattr(engine, "tracer", None)
+            if tr is not None and tr.enabled:
+                # same payload as the decision record — one schema, two
+                # views (repro.obs.trace.event_from_governor_decision).
+                # Sound under the fast stepper: only coalescible
+                # governors coalesce, and _advance_engine invokes
+                # on_step at the same clock the exact first step would
+                tr.instant("governor", "phi", engine.t,
+                           engine=engine.name, phi=phi, signal=signal)
         return phi
 
     def decide(self, engine) -> Tuple[float, str]:

@@ -263,7 +263,9 @@ class PowerTrace:
         samples (they should not happen for an accelerator, which has
         one clock) sum, matching the energy integral."""
         t0, t1 = self.span(component)
-        if t1 <= t0:
+        if n <= 0 or t1 <= t0:
+            # empty/unknown component, a single zero-width sample, or a
+            # degenerate grid: an empty curve, never a ZeroDivisionError
             return ([], [])
         step = (t1 - t0) / n
         times = [t0 + (i + 0.5) * step for i in range(n)]

@@ -208,6 +208,12 @@ class TieredKVStore:
         # movement ledger: every insert/promote/fetch/spill/drop,
         # reconciled against the EnergyMeter by tests/test_kvstore.py
         self.events: List[dict] = []
+        # observability (repro.obs): the owning engine installs its
+        # tracer and stamps `now` with its clock before lookup/insert,
+        # so tier movements land as instants on the "tier" track
+        from repro.obs.trace import NULL_TRACER
+        self.tracer = NULL_TRACER
+        self.now = 0.0
 
     # -- residency ------------------------------------------------------
     def _where(self, key: int) -> Optional[str]:
@@ -241,6 +247,10 @@ class TieredKVStore:
             "nbytes": pages * self.page_bytes,
             "latency_s": leg.latency_s if leg else 0.0,
             "energy_j": dict(leg.energy_j) if leg else {}})
+        if self.tracer.enabled:
+            self.tracer.instant("tier", op, self.now,
+                                src=src or "", dst=dst or "",
+                                pages=pages)
 
     def ledger_energy_j(self, ops: Sequence[str] = ("fetch", "spill"),
                         ) -> Dict[str, float]:

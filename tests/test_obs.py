@@ -1,0 +1,412 @@
+"""repro.obs contracts (DESIGN.md section 16, ISSUE 9).
+
+Three hard guarantees, each with its own test axis here:
+
+  1. tracer OFF (the default) is byte-identical to a build without the
+     hooks, and tracer ON is purely observational — every request
+     timestamp, metric, and joule matches the untraced run bit-for-bit;
+  2. fast vs exact steppers emit equivalent traces under the
+     window-span contract: identical engine traces after
+     ``Tracer.coalesced`` merging, identical lifecycle / governor /
+     controller instants with no normalization at all;
+  3. SLO attribution terms sum to the overrun exactly, and the derived
+     lifecycle reconciles with the ``Request`` fields and the
+     ``PowerTrace`` busy accounting to 1e-9.
+
+Plus the format contracts: TraceEvent / governor-decision / controller
+-action JSON round-trips (the event schema single-sources all three),
+Chrome export structural validity + lifecycle completeness, and the
+``RunRecord.obs`` metrics snapshot surviving the result cache.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core import SLO
+from repro.core.orchestrator import make_cluster
+from repro.fleet.spec import FleetSpec
+from repro.obs import (Attribution, LIFECYCLE_TRACK, MetricsRegistry,
+                       NULL_TRACER, TraceEvent, Tracer,
+                       assert_complete_lifecycles, attribute_run,
+                       blame_table, chrome_trace, collect_run_metrics,
+                       controller_action_from_event,
+                       event_from_controller_action,
+                       event_from_governor_decision,
+                       governor_decision_from_event, request_lifecycles,
+                       text_summary, transfer_queue_share,
+                       validate_chrome_trace)
+from repro.obs.trace import LIFECYCLE_ONCE
+from repro.workload import DEFAULT_INTERACTIVE_SLO, open_loop_workload
+
+CFG = get_config("llama32-3b")
+SETUPS = ("co-2gpus", "dis-ici", "dis-host", "dis-disk")
+
+REQUEST_FIELDS = ("arrival_s", "prefill_start_s", "prefill_done_s",
+                  "decode_start_s", "first_token_s", "finish_s",
+                  "generated", "evictions", "recomputed_tokens",
+                  "reused_tokens")
+
+
+def traced_run(setup, *, rate=2.0, n=10, seed=0, stepper=None,
+               tracer=None):
+    reqs = open_loop_workload(rate, n, slo=DEFAULT_INTERACTIVE_SLO,
+                              seed=seed)
+    cluster = make_cluster(setup, CFG, tracer=tracer)
+    res = cluster.run(reqs, stepper=stepper)
+    return cluster, reqs, res
+
+
+def req_state(reqs):
+    return [tuple(getattr(r, f) for f in REQUEST_FIELDS) for r in reqs]
+
+
+# ----------------------------------------------------------------------
+# contract 1: tracing is purely observational
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("setup", SETUPS)
+def test_tracer_on_is_bit_identical(setup):
+    _, reqs_off, res_off = traced_run(setup)
+    _, reqs_on, res_on = traced_run(setup, tracer=Tracer())
+    assert req_state(reqs_off) == req_state(reqs_on)
+    assert dataclasses.asdict(res_off.metrics) == \
+        dataclasses.asdict(res_on.metrics)
+    assert dict(res_off.energy.joules) == dict(res_on.energy.joules)
+    assert dict(res_off.energy.by_stage) == dict(res_on.energy.by_stage)
+
+
+def test_null_tracer_is_inert():
+    assert not NULL_TRACER.enabled
+    NULL_TRACER.span("acc0", "decode", 0.0, 1.0, steps=3)
+    NULL_TRACER.instant("governor", "phi", 0.5)
+    NULL_TRACER.lifecycle("arrival", 0, 0.0)
+    assert NULL_TRACER.events == []
+
+
+# ----------------------------------------------------------------------
+# contract 2: fast vs exact window-span equivalence
+# ----------------------------------------------------------------------
+def _instant_view(tr, track):
+    # sorted: instants carry their own timestamps, so cross-engine
+    # emission order (which a coalesced window legitimately batches)
+    # carries no information
+    return sorted((e.name, e.t0, tuple(sorted(e.args.items())))
+                  for e in tr.instants(track))
+
+
+@pytest.mark.parametrize("setup", SETUPS)
+def test_fast_exact_trace_equivalence(setup):
+    tr_e = Tracer()
+    tr_f = Tracer()
+    traced_run(setup, stepper="exact", tracer=tr_e)
+    traced_run(setup, stepper="fast", tracer=tr_f)
+    assert tr_e.engine_tracks() == tr_f.engine_tracks()
+    for track in tr_e.engine_tracks():
+        assert tr_e.coalesced(track) == tr_f.coalesced(track), track
+    for track in (LIFECYCLE_TRACK, "governor", "controller", "tier"):
+        assert _instant_view(tr_e, track) == _instant_view(tr_f, track)
+    # a coalesced decode window really did merge steps somewhere
+    if setup != "co-2gpus":
+        raw_f = len(tr_f.spans())
+        raw_e = len(tr_e.spans())
+        assert raw_f <= raw_e
+
+
+# ----------------------------------------------------------------------
+# contract 3: trace invariants and reconciliation
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("setup", SETUPS)
+def test_lifecycle_once_and_matches_request(setup, rate=2.0, n=10):
+    tr = Tracer()
+    _, reqs, _ = traced_run(setup, rate=rate, n=n, tracer=tr)
+    lcs = tr.lifecycle_events()
+    assert sorted(lcs) == [r.req_id for r in reqs]
+    for r in reqs:
+        evs = lcs[r.req_id]
+        for name in LIFECYCLE_ONCE:
+            assert len(evs[name]) == 1, (r.req_id, name)
+        assert evs["arrival"][0].t0 == r.arrival_s
+        assert evs["first_token"][0].t0 == r.first_token_s
+        assert evs["finish"][0].t0 == r.finish_s
+
+
+@pytest.mark.parametrize("setup", SETUPS)
+def test_engine_spans_monotone_nonoverlapping(setup):
+    tr = Tracer()
+    traced_run(setup, tracer=tr)
+    assert tr.events, "trace must not be empty"
+    for e in tr.events:
+        assert e.t1 >= e.t0 >= 0.0, e
+    for track in tr.engine_tracks():
+        spans = tr.spans(track)
+        for a, b in zip(spans, spans[1:]):
+            assert b.t0 >= a.t1 - 1e-12, (track, a, b)
+
+
+@pytest.mark.parametrize("setup", SETUPS)
+def test_span_durations_reconcile_with_power_trace(setup):
+    tr = Tracer()
+    cluster, _, _ = traced_run(setup, tracer=tr)
+    power = cluster.meter.trace
+    for eng in cluster.engines:
+        spanned = sum(e.dur for e in tr.spans(eng.name))
+        assert spanned == pytest.approx(eng.busy_s, abs=1e-9)
+        assert spanned == pytest.approx(power.busy_s(eng.name), abs=1e-9)
+
+
+@pytest.mark.parametrize("setup", SETUPS)
+def test_derived_lifecycle_is_contiguous(setup):
+    tr = Tracer()
+    _, reqs, _ = traced_run(setup, tracer=tr)
+    for r in reqs:
+        chain = tr.derive_lifecycle(r.req_id)
+        assert chain[0][0] == "queue" and chain[-1][0] == "decode"
+        assert chain[0][1] == r.arrival_s
+        assert chain[-1][2] == r.finish_s
+        for (_, _, t1), (_, t0, _) in zip(chain, chain[1:]):
+            assert t0 == t1          # shared boundary instants: exact
+
+
+@given(st.integers(0, 3), st.integers(1, 4), st.integers(0, 5))
+@settings(max_examples=8, deadline=None)
+def test_trace_invariants_fuzz(setup_i, rate, seed):
+    setup = SETUPS[setup_i]
+    tr = Tracer()
+    cluster, reqs, _ = traced_run(setup, rate=float(rate), n=8,
+                                  seed=seed, tracer=tr)
+    lcs = tr.lifecycle_events()
+    for r in reqs:
+        for name in LIFECYCLE_ONCE:
+            assert len(lcs[r.req_id][name]) == 1
+        chain = tr.derive_lifecycle(r.req_id)
+        assert chain[0][1] == r.arrival_s
+        assert chain[-1][2] == r.finish_s
+    for eng in cluster.engines:
+        spanned = sum(e.dur for e in tr.spans(eng.name))
+        assert spanned == pytest.approx(eng.busy_s, abs=1e-9)
+
+
+# ----------------------------------------------------------------------
+# SLO attribution
+# ----------------------------------------------------------------------
+def test_attribution_rejects_non_telescoping_terms():
+    with pytest.raises(AssertionError):
+        Attribution(req_id=0, metric="ttft", measured_s=3.0, target_s=1.0,
+                    overrun_s=2.0, terms={"queue": 1.0})
+
+
+@pytest.mark.parametrize("setup", ("co-2gpus", "dis-host", "dis-disk"))
+def test_attribution_terms_sum_exactly(setup):
+    tr = Tracer()
+    slo = SLO(ttft_s=0.3, tpot_s=0.004)    # tight: force violations
+    reqs = open_loop_workload(2.0, 10, slo=slo, seed=0)
+    cluster = make_cluster(setup, CFG, tracer=tr)
+    cluster.run(reqs)
+    attrs = attribute_run(reqs, slo, tr)
+    assert attrs, f"{setup}: tight SLO must produce violations"
+    for a in attrs:
+        assert a.overrun_s == pytest.approx(a.measured_s - a.target_s)
+        assert sum(a.terms.values()) == pytest.approx(a.overrun_s,
+                                                      abs=1e-9)
+        assert all(v >= 0.0 for v in a.terms.values()), a.terms
+    table = blame_table(attrs)
+    assert table["violations"] == len(attrs)
+    share = transfer_queue_share(table)
+    assert share is not None and 0.0 <= share <= 1.0
+
+
+def test_fig6_claim_shape_below_crossover():
+    """The CI narrative at unit scale: at a low offered rate the slow-
+    medium dis setup's violations are transfer+queue dominated."""
+    tr = Tracer()
+    slo = DEFAULT_INTERACTIVE_SLO
+    reqs = open_loop_workload(1.0, 10, slo=slo, seed=0)
+    cluster = make_cluster("dis-disk", CFG, tracer=tr)
+    cluster.run(reqs)
+    table = blame_table(attribute_run(reqs, slo, tr))
+    assert table["violations"] > 0
+    share = transfer_queue_share(table)
+    assert share is not None and share > 0.5
+
+
+def test_blame_table_empty():
+    table = blame_table([])
+    assert table == {"metrics": {}, "violations": 0}
+    assert transfer_queue_share(table) is None
+
+
+# ----------------------------------------------------------------------
+# format round-trips: the event schema single-sources three formats
+# ----------------------------------------------------------------------
+def test_trace_event_json_roundtrip():
+    ev = TraceEvent(name="decode", track="acc1", t0=1.25, t1=2.5,
+                    args={"steps": 17, "req": 3})
+    ev2 = TraceEvent.from_dict(json.loads(json.dumps(ev.to_dict())))
+    assert ev2 == ev and ev2.dur == ev.dur
+
+
+def test_governor_decision_roundtrip():
+    from repro.govern.governors import GovernorDecision
+    d = GovernorDecision(t=3.5, engine="acc0", phi=0.75, signal=0.42)
+    ev = event_from_governor_decision(d)
+    d2 = governor_decision_from_event(
+        TraceEvent.from_dict(json.loads(json.dumps(ev.to_dict()))))
+    assert d2 == d
+
+
+def test_controller_action_roundtrip():
+    action = {"t": 7.0, "op": "flip", "engine": "acc2",
+              "from": "prefill", "to": "decode"}
+    ev = event_from_controller_action(action)
+    back = controller_action_from_event(
+        TraceEvent.from_dict(json.loads(json.dumps(ev.to_dict()))))
+    assert back == action
+
+
+def test_live_governor_instants_match_decision_log():
+    """The governor track is the same record ``Governor.decisions``
+    keeps — derived through one converter, so they cannot drift."""
+    tr = Tracer()
+    spec = FleetSpec.disaggregated(1, 1, "ici", governor="queue-depth")
+    reqs = open_loop_workload(6.0, 16, slo=DEFAULT_INTERACTIVE_SLO,
+                              seed=0)
+    cluster = make_cluster(spec, CFG, tracer=tr)
+    cluster.run(reqs)
+    decisions = [d for e in cluster.engines for d in e.governor.decisions]
+    assert decisions, "queue-depth governor must retune under load"
+    want = sorted((ev.t0, tuple(sorted(ev.args.items())))
+                  for d in decisions
+                  for ev in [event_from_governor_decision(d)])
+    got = sorted((ev.t0, tuple(sorted(ev.args.items())))
+                 for ev in tr.instants("governor"))
+    assert got == want
+
+
+def test_controller_log_matches_controller_track():
+    tr = Tracer()
+    spec = FleetSpec(n_prefill=2, n_decode=2, medium="ici",
+                     controller="adaptive")
+    reqs = open_loop_workload(12.0, 48, slo=DEFAULT_INTERACTIVE_SLO,
+                              seed=0)
+    cluster = make_cluster(spec, CFG, tracer=tr)
+    cluster.run(reqs)
+    derived = [controller_action_from_event(ev)
+               for ev in tr.instants("controller")]
+    assert derived == list(cluster.controller_log)
+
+
+# ----------------------------------------------------------------------
+# Chrome export
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("setup", SETUPS)
+def test_chrome_export_valid_and_complete(setup, n=10):
+    tr = Tracer()
+    traced_run(setup, n=n, tracer=tr)
+    payload = chrome_trace(tr, label=setup)
+    payload = json.loads(json.dumps(payload))      # JSON-safe
+    assert validate_chrome_trace(payload) > 0
+    assert assert_complete_lifecycles(payload, n_requests=n) == n
+
+
+def test_chrome_export_fast_exact_same_lifecycles():
+    tr_e, tr_f = Tracer(), Tracer()
+    traced_run("dis-host", stepper="exact", tracer=tr_e)
+    traced_run("dis-host", stepper="fast", tracer=tr_f)
+    lc_e = request_lifecycles(chrome_trace(tr_e))
+    lc_f = request_lifecycles(chrome_trace(tr_f))
+    assert lc_e == lc_f
+
+
+def test_validate_rejects_malformed():
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"traceEvents": []})
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"traceEvents": [
+            {"ph": "Z", "pid": 1, "name": "x"}]})
+    with pytest.raises(ValueError):        # dangling async begin
+        validate_chrome_trace({"traceEvents": [
+            {"ph": "b", "pid": 1, "name": "queue", "cat": "request",
+             "id": 0, "ts": 0.0}]})
+
+
+def test_text_summary_renders():
+    tr = Tracer()
+    traced_run("dis-disk", tracer=tr)
+    out = text_summary(chrome_trace(tr))
+    assert "acc0" in out and "slowest" in out and "decode" in out
+    assert text_summary({"traceEvents": [
+        {"ph": "M", "pid": 1, "tid": 0, "name": "process_name",
+         "args": {"name": "empty"}}]}) == "(empty trace)"
+
+
+# ----------------------------------------------------------------------
+# metrics registry + RunRecord.obs
+# ----------------------------------------------------------------------
+def test_metrics_registry_snapshot_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("a.b").inc(3)
+    reg.gauge("g").set(0.25)
+    h = reg.histogram("lat")
+    for v in (0.0005, 0.003, 0.003, 42.0, 1e9):
+        h.observe(v)
+    snap = json.loads(json.dumps(reg.snapshot()))
+    reg2 = MetricsRegistry.from_snapshot(snap)
+    assert reg2.snapshot() == reg.snapshot()
+    assert h.count == 5 and h.counts[0] == 1 and h.counts[-1] == 1
+    assert h.mean == pytest.approx(h.sum / 5)
+
+
+def test_collect_run_metrics_reads_without_perturbing():
+    tr = Tracer()
+    cluster, reqs, _ = traced_run("dis-host", tracer=tr)
+    before = req_state(reqs)
+    snap1 = collect_run_metrics(cluster, reqs).snapshot()
+    snap2 = collect_run_metrics(cluster, reqs).snapshot()
+    assert snap1 == snap2
+    assert req_state(reqs) == before
+    assert snap1["counters"]["request.total"] == len(reqs)
+    assert snap1["counters"]["engine.steps"] == \
+        sum(e.steps for e in cluster.engines)
+    assert snap1["histograms"]["request.ttft_s"]["count"] == len(reqs)
+    # the fast stepper coalesced something on a disaggregated pair
+    assert snap1["counters"]["fastpath.windows"] > 0
+
+
+def test_run_record_obs_survives_the_cache(tmp_path):
+    from repro.exp import Experiment, ResultCache, run, set_default_cache
+    from repro.exp import runner as runner_mod
+    prev = runner_mod._DEFAULT_CACHE
+    set_default_cache(ResultCache(str(tmp_path / "cache")))
+    try:
+        exp = Experiment.open("dis-ici", 4.0, n=6, seed=1,
+                              slo=SLO(ttft_s=2.0, tpot_s=0.0075))
+        rec = run(exp)
+        assert rec.obs is not None
+        assert rec.obs["counters"]["request.total"] == 6
+        hit = run(exp)                      # cache hit: stored snapshot
+        assert hit.obs == rec.obs
+    finally:
+        set_default_cache(prev)
+
+
+def test_traced_exp_run_is_never_cached(tmp_path):
+    from repro.exp import Experiment, ResultCache, run, set_default_cache
+    from repro.exp import runner as runner_mod
+    from repro.exp.runner import sim_count
+    prev = runner_mod._DEFAULT_CACHE
+    set_default_cache(ResultCache(str(tmp_path / "cache")))
+    try:
+        exp = Experiment.open("dis-ici", 4.0, n=6, seed=1)
+        run(exp)                            # populate the cache
+        n0 = sim_count()
+        tr = Tracer()
+        rec = run(exp, tracer=tr)
+        assert sim_count() == n0 + 1        # simulated despite the hit
+        assert tr.events, "tracer must observe the traced run"
+        untraced = run(exp)
+        assert untraced.obs == rec.obs      # observational: same metrics
+    finally:
+        set_default_cache(prev)

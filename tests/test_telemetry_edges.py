@@ -1,0 +1,101 @@
+"""PowerTrace edge cases (ISSUE 9 satellite): empty traces, unknown
+components, zero-length samples, degenerate timeline grids — the states
+a post-run reporting path can hand the sampler, none of which may raise
+or mis-count."""
+import numpy as np
+import pytest
+
+from repro.govern.telemetry import ACTIVE, IDLE, PowerTrace
+
+
+def test_empty_trace():
+    tr = PowerTrace()
+    assert tr.components == []
+    assert tr.samples == {}
+    assert tr.energy_j() == 0.0
+    assert tr.state_summary() == {}
+    assert tr.timeline("nope") == ([], [])
+    assert tr.span("nope") == (0.0, 0.0)
+    assert tr.busy_s("nope") == 0.0
+    assert tr.intervals("nope") == []
+    assert tr.gaps("nope", 0.0, 1.0) == [(0.0, 1.0)]
+
+
+def test_zero_length_sample_is_dropped():
+    tr = PowerTrace()
+    tr.record("acc0", 1.0, 1.0, 300.0)          # t1 == t0
+    tr.record("acc0", 2.0, 1.5, 300.0)          # t1 < t0
+    assert tr.components == []
+    assert tr.energy_j() == 0.0
+
+
+def test_single_sample_summary_and_timeline():
+    tr = PowerTrace()
+    tr.record("acc0", 1.0, 3.0, 250.0, stage="decode")
+    s = tr.state_summary()["acc0"]
+    assert s["active_j"] == pytest.approx(500.0)
+    assert s["active_s"] == pytest.approx(2.0)
+    assert s["idle_j"] == 0.0
+    times, watts = tr.timeline("acc0", n=4)
+    assert len(times) == len(watts) == 4
+    assert all(w == pytest.approx(250.0) for w in watts)
+
+
+def test_timeline_degenerate_grids():
+    tr = PowerTrace()
+    tr.record("acc0", 1.0, 2.0, 100.0)
+    assert tr.timeline("acc0", n=0) == ([], [])
+    assert tr.timeline("acc0", n=-3) == ([], [])
+    times, watts = tr.timeline("acc0", n=1)
+    assert times == [pytest.approx(1.5)] and watts == [pytest.approx(100.0)]
+
+
+def test_timeline_zero_width_span():
+    """A component whose only samples were zero-length never materializes;
+    but a span collapsed to a point via record_run must not divide by
+    zero either."""
+    tr = PowerTrace()
+    tr.record_run("acc0", np.array([1.0]), np.array([1.0]),
+                  np.array([50.0]))
+    assert tr.timeline("acc0", n=16) == ([], [])
+    assert tr.energy_j("acc0") == 0.0
+
+
+def test_missing_component_energy_filters():
+    tr = PowerTrace()
+    tr.record("acc0", 0.0, 1.0, 10.0, state=ACTIVE)
+    tr.record("acc0", 1.0, 2.0, 3.0, state=IDLE)
+    assert tr.energy_j("acc1") == 0.0
+    assert tr.energy_j("acc0", state=IDLE) == pytest.approx(3.0)
+    assert tr.energy_j(state="sleep") == 0.0
+    assert tr.busy_s("acc0") == pytest.approx(1.0)
+
+
+def test_nonstandard_state_gets_own_summary_keys():
+    tr = PowerTrace()
+    tr.record("acc0", 0.0, 2.0, 5.0, state="boost")
+    s = tr.state_summary()["acc0"]
+    assert s["boost_j"] == pytest.approx(10.0)
+    assert s["boost_s"] == pytest.approx(2.0)
+    assert s["active_j"] == 0.0
+
+
+def test_fill_idle_never_backfills_covered_time():
+    tr = PowerTrace()
+    tr.record("acc0", 1.0, 2.0, 100.0)
+    filled = tr.fill_idle("acc0", 0.0, 3.0, idle_watts=7.0)
+    assert filled == pytest.approx(2.0)
+    assert tr.energy_j("acc0", state=IDLE) == pytest.approx(14.0)
+    assert tr.covers("acc0", 0.0, 3.0)
+    # idempotent: a second fill finds no gaps
+    assert tr.fill_idle("acc0", 0.0, 3.0, idle_watts=7.0) == 0.0
+
+
+def test_record_run_noncontiguous_falls_back_per_sample():
+    tr = PowerTrace()
+    t0s = np.array([0.0, 5.0])              # gap: not a contiguous run
+    t1s = np.array([1.0, 6.0])
+    tr.record_run("acc0", t0s, t1s, np.array([10.0, 20.0]))
+    assert tr.intervals("acc0") == [(0.0, 1.0), (5.0, 6.0)]
+    assert tr.energy_j("acc0") == pytest.approx(30.0)
+    assert tr.busy_s("acc0") == pytest.approx(2.0)
