@@ -22,6 +22,12 @@ through both steppers:
            tiered bail rule (DESIGN.md section 15) pins this ratio near
            1.0 the same way: a >1 ratio means the fast stepper coalesced
            across tier lookups whose residency is routing-visible
+  sched-interleave
+           1 colocated engine running the chunked-interleave composer
+           (repro.sched, DESIGN.md section 17) — composed mixed steps
+           are never uniform decode runs, so the scheduler bail rule
+           pins this ratio near 1.0 too: a >1 ratio means the fast
+           stepper coalesced across composed steps it cannot price
 
 The committed ``benchmarks/BENCH_simcore.json`` is the tracked baseline:
 re-run with ``--check`` to compare the CURRENT tree against it, failing
@@ -78,6 +84,12 @@ SCENARIOS: Dict[str, Tuple[FleetSpec, dict]] = {
                      dict(rate=8.0, n=64, vocab_size=512,
                           lengths=RAGSharedPrefixLengths(prefix_len=2048),
                           seed=0)),
+    "sched-interleave": (FleetSpec(n_colocated=1,
+                                   scheduler={"composer":
+                                              "chunked-interleave"}),
+                         dict(rate=8.0, n=40,
+                              lengths=PaperFixedLengths(1024, 128),
+                              seed=0)),
 }
 
 

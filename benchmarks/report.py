@@ -106,6 +106,44 @@ def energy_table(payload: Dict) -> str:
     return "\n".join(lines)
 
 
+def reuse_verdicts(payload: Dict) -> str:
+    """Human-readable verdicts for the fig10 claims block: did reuse
+    engage, cut prefill joules, move the crossover, dent the energy
+    gap. The booleans were machine-asserted when the figure ran; this
+    renders the quantitative outcomes next to them."""
+    c = payload["claims"]
+    lines = [
+        f"reuse engaged everywhere: {'yes' if c['reuse_engaged'] else 'NO'}",
+        f"prefill joules cut by every reuse config: "
+        f"{'yes' if c['prefill_j_cut_by_reuse'] else 'NO'}",
+        "",
+        "| reuse | dis setup | crossover (req/s) | shift vs none |",
+        "|---|---|---|---|",
+    ]
+    shifts = c.get("crossover_shift", {})
+    for reuse, per_dis in sorted(c["crossovers"].items()):
+        for dis, x in sorted(per_dis.items()):
+            sh = shifts.get(reuse, {}).get(dis)
+            lines.append(
+                f"| {reuse} | {dis} | "
+                f"{'none in range' if x is None else x} | "
+                f"{'–' if sh is None else f'{sh:+}'} |")
+    lines += [
+        "",
+        f"energy gap dented anywhere: "
+        f"{'yes' if c['gap_dented_anywhere'] else 'no'}",
+        "| dis setup | rate | reuse | gap none (J) | gap reuse (J) "
+        "| dent (J) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for g in c["gap_dent_at"]:
+        lines.append(
+            f"| {g['dis']} | {g['rate_rps']} | {g['reuse']} | "
+            f"{g['gap_none_j']:+.0f} | {g['gap_reuse_j']:+.0f} | "
+            f"{g['dent_j']:+.0f} |")
+    return "\n".join(lines)
+
+
 def fill(experiments_path: str, marker: str, content: str) -> None:
     """Idempotent fill between <!-- MARKER_BEGIN/END --> sentinels."""
     with open(experiments_path) as f:
@@ -126,6 +164,9 @@ def main(argv=None):
     ap.add_argument("--energy-json", default=None,
                     help="fig8 governor JSON: print the per-stage "
                          "idle/active energy breakdown instead")
+    ap.add_argument("--reuse-json", default=None,
+                    help="fig10 reuse JSON: print the claim verdicts "
+                         "(crossover shifts, energy-gap dents) instead")
     ap.add_argument("--trace", default=None,
                     help="exported Chrome trace JSON (fig6_trace_*.json "
                          "or examples/trace_run.py output): print the "
@@ -137,6 +178,10 @@ def main(argv=None):
         from repro.obs.export import text_summary
         with open(args.trace) as f:
             print(text_summary(json.load(f)))
+        return
+    if args.reuse_json:
+        with open(args.reuse_json) as f:
+            print(reuse_verdicts(json.load(f)))
         return
     if args.energy_json:
         with open(args.energy_json) as f:

@@ -23,8 +23,9 @@ from repro.exp import default_cache, sim_count, uncached_sim_count
 
 from . import (common, fig1_latency, fig2_throughput, fig3_energy,
                fig4_breakdown, fig5_pareto, fig6_load_crossover,
-               fig7_fleet_ratio, fig8_governor_pareto, reuse_bench,
-               roofline, validate_claims)
+               fig7_fleet_ratio, fig8_governor_pareto,
+               fig10_reuse_crossover, fig11_scheduler_frontier,
+               reuse_bench, roofline, validate_claims)
 
 
 def main(argv=None) -> int:
@@ -60,6 +61,10 @@ def main(argv=None) -> int:
     fig7_fleet_ratio.run(args.arch, smoke=args.quick,
                          n=16 if args.quick else common.OPEN_LOOP_N)
     fig8_governor_pareto.run(args.arch, smoke=args.quick)
+    # figs 10/11 self-check their claims (assertions inside run());
+    # --quick routes both onto their CI smoke grids
+    fig10_reuse_crossover.run(args.arch, smoke=args.quick)
+    fig11_scheduler_frontier.run(args.arch, smoke=args.quick)
     reuse_bench.run(arch=args.arch)
     failures = validate_claims.run(batches)
     if not args.skip_roofline:

@@ -1,0 +1,94 @@
+"""Scheduler frontier demo (repro.sched, DESIGN.md section 17).
+
+Three contrasts, each a couple of cached simulations:
+
+1. serial vs chunked-interleave colocation at a rate where the serial
+   composer's full-prefill stalls blow the interactive TPOT budget —
+   chunking bounds every stall to one composed step and keeps goodput;
+2. FCFS vs SRPT admission on a bimodal wave — short jobs jump the one
+   long prefill that would otherwise head-of-line-block them;
+3. the intra-GPU sixth setup vs dis-disk at the batch tier — same
+   phase isolation, zero transfer joules.
+
+  PYTHONPATH=src python examples/scheduler_frontier.py
+"""
+import argparse
+
+from repro.core import SLO
+from repro.exp import Experiment, run
+from repro.workload import DEFAULT_INTERACTIVE_SLO
+
+CHUNKED = {"composer": "chunked-interleave"}
+BATCH_SLO = SLO(ttft_s=5.0, tpot_s=0.05)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama32-3b")
+    ap.add_argument("--rate", type=float, default=4.5,
+                    help="offered rate for the composer contrast "
+                         "(default sits above serial's collapse)")
+    ap.add_argument("--n", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    # 1. composer contrast at the interactive SLO --------------------
+    print(f"== composers: co-2gpus @ {args.rate} rps, interactive SLO "
+          f"(ttft {DEFAULT_INTERACTIVE_SLO.ttft_s}s / tpot "
+          f"{DEFAULT_INTERACTIVE_SLO.tpot_s * 1e3:.1f}ms)")
+    for label, sched in (("serial", None), ("chunked-interleave", CHUNKED),
+                         ("chunked + srpt", {**CHUNKED,
+                                             "admission": "srpt"})):
+        exp = Experiment.open("co-2gpus", args.rate, arch=args.arch,
+                              n=args.n, seed=args.seed,
+                              slo=DEFAULT_INTERACTIVE_SLO)
+        if sched is not None:
+            exp = exp.with_scheduler(sched)
+        rec = run(exp)
+        m = rec.metrics
+        mixed = rec.energy_by_stage.get("mixed", 0.0)
+        print(f"  {label:18s} goodput {rec.goodput['goodput_rps']:.3f} "
+              f"rps  attain {rec.goodput['attainment']:.0%}  median "
+              f"TPOT {m.median_tpot_s * 1e3:.2f}ms  mixed-stage "
+              f"{mixed:.0f} J")
+
+    # 2. admission contrast: one long prefill + a burst of shorts
+    # (a hand-built bimodal wave, simulated directly — spec workloads
+    # share one length mix, and the contrast needs two)
+    print("\n== admission: 1 long (16k) + 6 short (256) jobs at t=0, "
+          "co-1gpu")
+    from repro.configs import get_config
+    from repro.core.orchestrator import run_setup
+    from repro.core.request import Request
+    from repro.fleet import FleetSpec
+    for admission in ("fcfs", "srpt"):
+        reqs = [Request(req_id=0, prompt_len=16_384, output_len=16,
+                        arrival_s=0.0)] + \
+               [Request(req_id=i, prompt_len=256, output_len=16,
+                        arrival_s=0.0) for i in range(1, 7)]
+        spec = FleetSpec(n_colocated=1, scheduler=admission)
+        run_setup(spec, get_config(args.arch), reqs)
+        short_ft = max(r.first_token_s for r in reqs[1:])
+        print(f"  {admission:5s} long first-token "
+              f"{reqs[0].first_token_s:.3f}s  slowest short "
+              f"{short_ft:.3f}s")
+
+    # 3. intra-gpu vs dis-disk at the batch tier ---------------------
+    print(f"\n== sixth setup: intra-gpu vs dis-disk @ 1 rps, batch SLO "
+          f"(ttft {BATCH_SLO.ttft_s}s / tpot "
+          f"{BATCH_SLO.tpot_s * 1e3:.0f}ms)")
+    for setup in ("intra-gpu", "dis-disk"):
+        rec = run(Experiment.open(setup, 1.0, arch=args.arch, n=args.n,
+                                  seed=args.seed, slo=BATCH_SLO))
+        es = rec.energy_by_stage
+        xfer = es.get("transfer-store", 0.0) + es.get("transfer-fetch",
+                                                      0.0)
+        print(f"  {setup:9s} goodput {rec.goodput['goodput_rps']:.3f} "
+              f"rps  transfer {xfer:.0f} J  total "
+              f"{sum(es.values()):.0f} J")
+    print("\nfull sweep + machine-checked claims: "
+          "python -m benchmarks.fig11_scheduler_frontier --smoke")
+
+
+if __name__ == "__main__":
+    main()

@@ -178,6 +178,22 @@ class CostModel:
         return StepCost(compute_s=flops / self.acc.peak_flops,
                         memory_s=bytes_moved / self.acc.hbm_bw)
 
+    def mixed_step_cost(self, chunks, batch: int,
+                        total_ctx_tokens: int) -> StepCost:
+        """One composed chunked-interleave step (repro.sched): prefill
+        ``chunks`` = [(tokens, c0, c1), ...] fused with a decode step
+        emitting one token for each of ``batch`` sequences whose
+        contexts sum to ``total_ctx_tokens``. Compute adds; HBM traffic
+        adds EXCEPT the weight stream, which both halves share — the
+        whole point of piggybacking decode on a prefill step (Sarathi):
+        the second weight read is subtracted back out."""
+        p = self.prefill_step_cost(chunks)
+        d = self.decode_cost(batch, total_ctx_tokens)
+        dup_weights_s = self.param_bytes_active / self.acc.hbm_bw
+        return StepCost(
+            compute_s=p.compute_s + d.compute_s,
+            memory_s=p.memory_s + d.memory_s - dup_weights_s)
+
     def decode_cost(self, batch: int, total_ctx_tokens: int) -> StepCost:
         """One decode step emitting 1 token for each of ``batch`` sequences
         whose context lengths sum to ``total_ctx_tokens``."""
@@ -288,3 +304,28 @@ class CostModel:
     def sleep_power_w(self) -> float:
         """Deep-sleep residual draw (fleet controller's scale-to-zero)."""
         return self.acc.p_sleep_w
+
+    # ------------------------------------------------------------------
+    def slice(self, frac: float) -> "CostModel":
+        """An SM-partition slice of this accelerator (RAPID-Serve-style
+        intra-GPU P/D disaggregation): compute, HBM bandwidth, and ALL
+        power rails (static/dynamic/sleep) scale by ``frac``, so two
+        complementary slices sum back to the whole accelerator's
+        roofline and power envelope. Model-derived constants
+        (``kv_bytes_per_token``, ``param_bytes_active``, ...) are
+        cfg-derived and unchanged — KV pages are the same size on a
+        slice, which is what lets the two slices share one pool."""
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"slice fraction must be in (0, 1], "
+                             f"got {frac}")
+        chip = self.acc.chip
+        sliced = dataclasses.replace(
+            chip,
+            peak_flops=chip.peak_flops * frac,
+            hbm_bw=chip.hbm_bw * frac,
+            p_static_w=chip.p_static_w * frac,
+            p_dyn_w=chip.p_dyn_w * frac,
+            p_sleep_w=chip.p_sleep_w * frac)
+        return CostModel(self.cfg,
+                         dataclasses.replace(self.acc, chip=sliced),
+                         self.host)

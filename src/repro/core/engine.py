@@ -52,14 +52,22 @@ class EngineSeq:
     # flag so preemption/re-admission never double-charges the fetch
     tier_hit: Any = None
     tier_charged: bool = False
+    # admission-order override (repro.sched): a tuple key computed by
+    # SchedulerSpec.admission_key at every waiting-queue insert; None
+    # under FCFS, keeping the legacy int req_id priority bit-for-bit
+    admission_key: Optional[tuple] = None
 
     @property
     def seq_id(self) -> int:
         return self.req.req_id
 
     @property
-    def priority(self) -> int:
-        # FCFS: lower req_id = earlier arrival = higher priority
+    def priority(self):
+        # FCFS: lower req_id = earlier arrival = higher priority; an
+        # SJF/SRPT/prefix-aware scheduler substitutes its tuple key
+        # (whose trailing element is req_id — deterministic tie-break)
+        if self.admission_key is not None:
+            return self.admission_key
         return self.req.req_id
 
 
@@ -97,6 +105,14 @@ class Engine:
         # Mutually exclusive with prefix_cache (the fleet attaches one
         # or the other); a tiered engine is never fast-path eligible.
         self.kv_store = None
+        # per-step batch composition + admission order (repro.sched,
+        # DESIGN.md section 17): a SchedulerSpec set by the cluster.
+        # None = the legacy serialize-prefill FCFS paths, byte-for-byte;
+        # a non-coalescible spec also disables the fast path.
+        self.scheduler = None
+        # chunked-interleave audit log: (req_id, c0, c1) per scheduled
+        # prefill chunk — the conservation invariant tests read this
+        self.chunk_log: List[Tuple[int, int, int]] = []
 
         self.t = 0.0                 # engine-local clock
         self.busy_s = 0.0
@@ -166,6 +182,10 @@ class Engine:
         self._enqueue_waiting(seq)
 
     def _enqueue_waiting(self, seq: EngineSeq) -> None:
+        if self.scheduler is not None:
+            # recomputed at every insert: a preempted-and-requeued
+            # sequence re-sorts by its live remaining work (SRPT)
+            seq.admission_key = self.scheduler.admission_key(seq, self)
         bisect.insort(self.waiting, seq, key=lambda s: s.priority)
 
     def enqueue_decode(self, seq: EngineSeq, handle: Any, fetch_cost) -> None:
@@ -269,7 +289,7 @@ class Engine:
             self._tier_fetch_step()
             return True
         if self.prefilling:
-            return self._prefill_step()
+            return self._compose_step()
         if self.running:
             return self._decode_step()
         if self.waiting and self.pool.free_pages > 0 \
@@ -283,8 +303,16 @@ class Engine:
                 self.t = t_next
                 self._admit()
                 if self.prefilling:
-                    return self._prefill_step()
+                    return self._compose_step()
         return False
+
+    def _compose_step(self):
+        """Route a step with prefill work through the configured step
+        composer: the legacy serialize-prefill path, or the Sarathi-style
+        chunked-interleave composer (repro.sched)."""
+        if self.scheduler is not None and self.scheduler.interleaves:
+            return self._interleaved_step()
+        return self._prefill_step()
 
     # ------------------------------------------------------------------
     def _account(self, cost: StepCost, stage: str) -> float:
@@ -382,7 +410,7 @@ class Engine:
     # ------------------------------------------------------------------
     # preemption (vLLM recompute-style)
     # ------------------------------------------------------------------
-    def _victims_below(self, priority: int) -> List[EngineSeq]:
+    def _victims_below(self, priority) -> List[EngineSeq]:
         """Sequences holding pages, strictly lower priority, lowest first.
 
         (A decode-victims-first variant was hypothesized to keep TTFT
@@ -392,7 +420,8 @@ class Engine:
         holders = [s for s in self.running + self.prefilling
                    if s.priority > priority
                    and self.pool.has_seq(s.seq_id)]
-        return sorted(holders, key=lambda s: -s.priority)
+        # reverse=True, not key=-priority: admission keys may be tuples
+        return sorted(holders, key=lambda s: s.priority, reverse=True)
 
     def _preempt(self, seq: EngineSeq) -> None:
         self.pool.free_seq(seq.seq_id)
@@ -468,56 +497,63 @@ class Engine:
             seq.prefill_done = c1
             seq.ctx = c1
             if seq.prefill_done >= seq.prefill_target:
-                self.prefilling.remove(seq)
-                seq.req.prefill_done_s = t_end
-                if self.tracer.enabled:
-                    self.tracer.lifecycle("prefill_done", seq.req.req_id,
-                                          t_end, engine=self.name)
-                    if self.kv_store is not None:
-                        self.kv_store.now = t_end
-                self.pool.touch(seq.seq_id)
-                if self.kv_store is not None and \
-                        seq.req.prompt_tokens is not None:
-                    # newly computed pages are born in HBM; demotions
-                    # forced by the overflow — and by releasing this
-                    # sequence's pins — are priced spill legs
-                    legs = self.kv_store.insert(seq.req.prompt_tokens)
-                    if seq.tier_hit is not None:
-                        legs += self.kv_store.release(seq.tier_hit.pins)
-                    for leg in legs:
-                        for comp, joules in leg.energy_j.items():
-                            self.meter.add(comp, joules,
-                                           stage="tier-spill")
-                elif self.prefix_cache is not None and \
-                        seq.req.prompt_tokens is not None:
-                    self.prefix_cache.insert(seq.req.prompt_tokens)
-                if self.executor is not None:
-                    seq.state, seq.last_logits, seq.next_token = \
-                        self.executor.prefill(seq)
-                if self.role == "colocated":
-                    if seq.req.first_token_s is None:
-                        # first token sampled from prefill logits (vLLM)
-                        seq.req.first_token_s = t_end
-                        seq.req.generated = 1
-                        if seq.next_token is not None:
-                            seq.req.output_tokens.append(int(seq.next_token))
-                        if self.tracer.enabled:
-                            self.tracer.lifecycle(
-                                "first_token", seq.req.req_id, t_end,
-                                engine=self.name)
-                    if seq.req.generated >= seq.req.output_len:
-                        # single-token outputs finish at the first token
-                        seq.req.finish_s = t_end
-                        self.pool.free_seq(seq.seq_id)
-                        if self.tracer.enabled:
-                            self.tracer.lifecycle(
-                                "finish", seq.req.req_id, t_end,
-                                engine=self.name)
-                    else:
-                        self.running.append(seq)
-                else:
-                    self.on_prefill_done(self, seq, t_end)
+                self._complete_prefill(seq, t_end)
         return True
+
+    def _complete_prefill(self, seq: EngineSeq, t_end: float) -> None:
+        """Bookkeeping when a sequence's LAST prefill chunk lands —
+        shared by the serial and chunked-interleave step composers:
+        reuse-layer insert/release, executor prefill, and either the
+        colocated first-token release or the disaggregated handoff."""
+        self.prefilling.remove(seq)
+        seq.req.prefill_done_s = t_end
+        if self.tracer.enabled:
+            self.tracer.lifecycle("prefill_done", seq.req.req_id,
+                                  t_end, engine=self.name)
+            if self.kv_store is not None:
+                self.kv_store.now = t_end
+        self.pool.touch(seq.seq_id)
+        if self.kv_store is not None and \
+                seq.req.prompt_tokens is not None:
+            # newly computed pages are born in HBM; demotions
+            # forced by the overflow — and by releasing this
+            # sequence's pins — are priced spill legs
+            legs = self.kv_store.insert(seq.req.prompt_tokens)
+            if seq.tier_hit is not None:
+                legs += self.kv_store.release(seq.tier_hit.pins)
+            for leg in legs:
+                for comp, joules in leg.energy_j.items():
+                    self.meter.add(comp, joules,
+                                   stage="tier-spill")
+        elif self.prefix_cache is not None and \
+                seq.req.prompt_tokens is not None:
+            self.prefix_cache.insert(seq.req.prompt_tokens)
+        if self.executor is not None:
+            seq.state, seq.last_logits, seq.next_token = \
+                self.executor.prefill(seq)
+        if self.role == "colocated":
+            if seq.req.first_token_s is None:
+                # first token sampled from prefill logits (vLLM)
+                seq.req.first_token_s = t_end
+                seq.req.generated = 1
+                if seq.next_token is not None:
+                    seq.req.output_tokens.append(int(seq.next_token))
+                if self.tracer.enabled:
+                    self.tracer.lifecycle(
+                        "first_token", seq.req.req_id, t_end,
+                        engine=self.name)
+            if seq.req.generated >= seq.req.output_len:
+                # single-token outputs finish at the first token
+                seq.req.finish_s = t_end
+                self.pool.free_seq(seq.seq_id)
+                if self.tracer.enabled:
+                    self.tracer.lifecycle(
+                        "finish", seq.req.req_id, t_end,
+                        engine=self.name)
+            else:
+                self.running.append(seq)
+        else:
+            self.on_prefill_done(self, seq, t_end)
 
     # ------------------------------------------------------------------
     def _decode_step(self) -> float:
@@ -542,18 +578,119 @@ class Engine:
         for seq in batch:
             if seq not in self.running:
                 continue   # preempted during the growth loop
-            seq.ctx += 1
-            self.pool.touch(seq.seq_id)
-            seq.req.generated += 1
-            if seq.next_token is not None:
-                seq.req.output_tokens.append(int(seq.next_token))
-            if seq.req.generated >= seq.req.output_len:
-                seq.req.finish_s = t_end
-                self.pool.free_seq(seq.seq_id)
-                self.running.remove(seq)
-                if self.tracer.enabled:
-                    self.tracer.lifecycle("finish", seq.req.req_id,
-                                          t_end, engine=self.name)
+            self._complete_decode_token(seq, t_end)
+        return True
+
+    def _complete_decode_token(self, seq: EngineSeq, t_end: float) -> None:
+        """One emitted token's bookkeeping — shared by the serial decode
+        step and the chunked-interleave composed step."""
+        seq.ctx += 1
+        self.pool.touch(seq.seq_id)
+        seq.req.generated += 1
+        if seq.next_token is not None:
+            seq.req.output_tokens.append(int(seq.next_token))
+        if seq.req.generated >= seq.req.output_len:
+            seq.req.finish_s = t_end
+            self.pool.free_seq(seq.seq_id)
+            self.running.remove(seq)
+            if self.tracer.enabled:
+                self.tracer.lifecycle("finish", seq.req.req_id,
+                                      t_end, engine=self.name)
+
+    # ------------------------------------------------------------------
+    def _interleaved_step(self) -> float:
+        """Sarathi-style composed step (the ``chunked-interleave``
+        composer, repro.sched): grow the running decode batch by one
+        token each AND pack prefill chunks into the remainder of the
+        step's ``chunk_tokens`` budget. Stall-free batching: every
+        composed step emits one token per running sequence, so the
+        worst decode inter-token gap is ONE chunk-bounded step — the
+        prefill backlog can no longer starve TPOT the way the serial
+        composer's full-budget prefill steps do. Priced exactly by
+        ``CostModel.mixed_step_cost`` (weights stream once for both
+        halves; compute and HBM traffic add)."""
+        sched = self.scheduler
+        # decode side first — identical growth/preemption discipline to
+        # _decode_step (decode-role engines are pre-reserved, no growth)
+        if self.role != "decode":
+            for seq in sorted(self.running, key=lambda s: s.priority):
+                if seq not in self.running:
+                    continue   # preempted by an earlier seq's growth
+                if not self._alloc_or_preempt(seq, 1):
+                    self._preempt(seq)
+        # prefill side: one decode token per running sequence is spent
+        # from the composed budget before any chunk is packed — that IS
+        # the stall-free guarantee (decode work is never displaced)
+        budget = max(sched.chunk_tokens - len(self.running), 0)
+        chunks: List[Tuple[EngineSeq, int, int]] = []
+        for seq in list(self.prefilling):
+            if budget <= 0:
+                break
+            if seq not in self.prefilling:
+                continue   # preempted by an earlier seq's allocation
+            remaining = seq.prefill_target - seq.prefill_done
+            take = min(remaining, budget)
+            if take <= 0:
+                continue
+            if not self._alloc_or_preempt(seq, take):
+                # pool exhausted by higher-priority holders: absorb the
+                # free slack, exactly like the serial composer
+                take = min(take,
+                           self.pool.free_pages * self.pool.page_size)
+                if take <= 0 or not self._alloc_or_preempt(seq, take):
+                    break
+            chunks.append((seq, seq.prefill_done, seq.prefill_done + take))
+            budget -= take
+        # chunk packing may have preempted grown decode sequences:
+        # compose the batch AFTER packing so pricing matches execution
+        batch = list(self.running)
+        if not chunks and not batch:
+            return False
+        total_ctx = sum(s.ctx for s in batch)
+        if chunks and batch:
+            cost = self.cost.mixed_step_cost(
+                [(c1 - c0, c0, c1) for _, c0, c1 in chunks],
+                len(batch), total_ctx)
+            stage = "mixed"
+        elif chunks:
+            cost = self.cost.prefill_step_cost(
+                [(c1 - c0, c0, c1) for _, c0, c1 in chunks])
+            stage = "prefill"
+        else:
+            cost = self.cost.decode_cost(len(batch), total_ctx)
+            stage = "decode"
+        t0 = self.t
+        t_end = self._account(cost, stage)
+
+        for seq, c0, c1 in chunks:
+            self.chunk_log.append((seq.req.req_id, c0, c1))
+        if self.tracer.enabled:
+            # scheduler decisions are first-class trace events: an
+            # instant on the engine track, plus one span per chunk on a
+            # dedicated sched:<engine> track (Perfetto-visible chunks)
+            self.tracer.instant(self.name, "sched", t0,
+                                decode_batch=len(batch),
+                                prefill_tokens=sum(
+                                    c1 - c0 for _, c0, c1 in chunks),
+                                chunks=len(chunks))
+            for seq, c0, c1 in chunks:
+                self.tracer.span(f"sched:{self.name}", "chunk", t0,
+                                 t_end, steps=0, req=seq.req.req_id,
+                                 c0=c0, c1=c1)
+
+        if self.executor is not None and batch:
+            self.executor.decode_batch(batch)
+        for seq in batch:
+            if seq not in self.running:
+                continue   # preempted during the packing loop
+            self._complete_decode_token(seq, t_end)
+        for seq, c0, c1 in chunks:
+            if not self.pool.has_seq(seq.seq_id):
+                continue   # preempted later in the same step's alloc loop
+            seq.prefill_done = c1
+            seq.ctx = c1
+            if seq.prefill_done >= seq.prefill_target:
+                self._complete_prefill(seq, t_end)
         return True
 
 

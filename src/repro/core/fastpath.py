@@ -70,6 +70,9 @@ def fast_decode_eligible(e) -> bool:
     gov = e.governor
     if gov is not None and not gov.coalescible:
         return False
+    sched = getattr(e, "scheduler", None)
+    if sched is not None and not sched.coalescible:
+        return False               # chunked/SRPT scheduler: exact (s17)
     if e.decode_queue and e._can_admit_decode(e.decode_queue[0][0]):
         return False               # exact stepper would admit: bail
     return True

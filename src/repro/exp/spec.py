@@ -129,6 +129,16 @@ def encode_fleet(spec: FleetSpec) -> Dict[str, Any]:
         d.pop("reuse")
     else:
         d["reuse"] = spec.reuse.encode()
+    if spec.scheduler is None:
+        # omit-when-None again (repro.sched): pre-scheduler hashes pinned
+        d.pop("scheduler")
+    else:
+        d["scheduler"] = _encode_fields(spec.scheduler)
+    if spec.n_intra == 0:
+        # the intra-GPU shape keys only exist for intra fleets — every
+        # co / xP:yD spec hash survives bit-identical
+        d.pop("n_intra")
+        d.pop("intra_split")
     return d
 
 
@@ -382,6 +392,13 @@ class Experiment:
         other home: identical simulation, distinct cache hash."""
         return replace(self, reuse=as_reuse_spec(reuse))
 
+    def with_scheduler(self, scheduler) -> "Experiment":
+        """Attach (or with None, detach) a per-step scheduler policy
+        (repro.sched) — a composer/admission name, kwargs dict, or
+        ``SchedulerSpec``. None is the legacy engine byte-for-byte."""
+        return replace(self, fleet=replace(self.fleet,
+                                           scheduler=scheduler))
+
     def with_workload(self, **kw) -> "Experiment":
         return replace(self, workload=replace(self.workload, **kw))
 
@@ -452,6 +469,8 @@ def apply_spec_knobs(exp: "Experiment", kw: Dict[str, Any]):
         exp = exp.with_controller(kw.pop("controller"))
     if "reuse" in kw:
         exp = exp.with_reuse(kw.pop("reuse"))
+    if "scheduler" in kw:
+        exp = exp.with_scheduler(kw.pop("scheduler"))
     return exp, kw
 
 

@@ -78,6 +78,7 @@ class FleetCluster:
                  phi_decode: Optional[Phi] = None,
                  governor: Optional[Union[str, Tuple[str, ...]]] = None,
                  reuse: Optional[Union[str, dict, ReuseSpec]] = None,
+                 scheduler=None,
                  page_size: int = 16,
                  prefill_token_budget: int = 8192,
                  pool_bytes: Optional[float] = None,
@@ -98,6 +99,10 @@ class FleetCluster:
             # same sweep-plumbing shape for KV reuse (DESIGN.md s15)
             from dataclasses import replace
             spec = replace(spec, reuse=reuse)
+        if scheduler is not None:
+            # same sweep-plumbing shape for the step scheduler (s17)
+            from dataclasses import replace
+            spec = replace(spec, scheduler=scheduler)
         self.spec = spec
         self.setup = spec.name
         self.cfg = cfg
@@ -141,6 +146,40 @@ class FleetCluster:
                     self.meter, phi=phi_i,
                     prefill_token_budget=prefill_token_budget, executor=ex))
             self.prefill_engines = self.engines
+        elif spec.is_intra:
+            # intra-GPU P/D disaggregation (RAPID-Serve, DESIGN.md s17):
+            # each accelerator is SM-partitioned into a prefill slice
+            # and a decode slice — two engines whose CostModels are
+            # complementary slices of ONE accelerator (rooflines and
+            # power rails sum back to the whole part) sharing ONE KV
+            # pool. The handoff never leaves HBM: no TransferPath, no
+            # transfer joules, zero latency (_intra_handoff).
+            cost_p = self.cost.slice(spec.intra_split)
+            cost_d = self.cost.slice(1.0 - spec.intra_split)
+            for i, (phi_p, phi_d) in enumerate(zip(spec.phis_prefill,
+                                                   spec.phis_decode)):
+                pool = new_pool()
+                ex_p = executor_factory(None) if executor_factory else None
+                ex_d = executor_factory(None) if executor_factory else None
+                ep = Engine(f"acc{i}p", "prefill", cost_p, pool,
+                            self.meter, phi=phi_p,
+                            prefill_token_budget=prefill_token_budget,
+                            executor=ex_p,
+                            on_prefill_done=self._intra_handoff)
+                ep.fleet_index = i
+                ed = Engine(f"acc{i}d", "decode", cost_d, pool,
+                            self.meter, phi=phi_d,
+                            prefill_token_budget=prefill_token_budget,
+                            executor=ex_d)
+                ed.fleet_index = i
+                ed.inflight_kv_pages = 0
+                # the handoff target is the fixed same-accelerator peer
+                # (KV is physically resident there already) — no KV
+                # routing decision exists for this shape
+                ep.intra_peer = ed
+                self.prefill_engines.append(ep)
+                self.decode_engines.append(ed)
+            self.engines = self.prefill_engines + self.decode_engines
         else:
             x, y = spec.n_prefill, spec.n_decode
             for i in range(x):
@@ -184,6 +223,13 @@ class FleetCluster:
 
         for eng in self.engines:
             eng.tracer = self.tracer
+
+        # per-step scheduler (repro.sched, DESIGN.md section 17): one
+        # normalized SchedulerSpec shared by every engine. None leaves
+        # Engine.scheduler = None — the legacy paths, byte-for-byte.
+        if spec.scheduler is not None:
+            for eng in self.engines:
+                eng.scheduler = spec.scheduler
 
         # legacy attribute: the single transfer path of a 1P:1D fleet
         self.path: Optional[TransferPath] = self.paths.get((0, 0)) \
@@ -361,6 +407,25 @@ class FleetCluster:
                                   src=engine.name, dst=engine.name)
         engine.t = max(engine.t, t)
         engine.enqueue_decode(seq, None, LegCost(0.0))
+
+    def _intra_handoff(self, engine: Engine, seq: EngineSeq, t: float):
+        """Prefill-slice -> decode-slice handoff inside ONE accelerator
+        (the intra-gpu shape): the KV pages already live in the shared
+        HBM pool, so there is no transfer leg at all — zero latency,
+        zero joules, the dominance fig11 machine-checks against
+        dis-disk. Like ``_local_handoff``, the pages are freed and
+        immediately re-reserved under the decode slice's prompt+output
+        reservation discipline (``engine.pool`` IS the peer's pool)."""
+        dec = engine.intra_peer
+        engine.pool.free_seq(seq.seq_id)
+        seq.req.transfer_done_s = t
+        if self.tracer.enabled:
+            self.tracer.lifecycle("transfer_start", seq.req.req_id, t,
+                                  src=engine.name, dst=dec.name)
+            self.tracer.lifecycle("transfer_done", seq.req.req_id, t,
+                                  src=engine.name, dst=dec.name)
+        dec.t = max(dec.t, t)
+        dec.enqueue_decode(seq, None, LegCost(0.0))
 
     def _start_transfer(self, engine: Engine, seq: EngineSeq,
                         t_done: float, dec: Engine):
@@ -751,6 +816,17 @@ class FleetCluster:
                     # (sleep or flip), which can free parked work
                     if self._draining and self._check_drains(eng.t):
                         stalled.clear()
+                    # engines SHARING this engine's pool (the intra-gpu
+                    # P/D slices) may have stalled on pages this step
+                    # just freed — un-stall them, since no heap event
+                    # marks an in-HBM free. A no-op for per-engine
+                    # pools: a stalled engine never shares a pool with
+                    # a progressing one there.
+                    if stalled:
+                        freed = {s for s in stalled
+                                 if s.pool is eng.pool}
+                        if freed:
+                            stalled -= freed
                 else:
                     # no progress (e.g. pool blocked by in-flight stores):
                     # park until the next event frees resources
@@ -800,8 +876,18 @@ class FleetCluster:
         # inject tier-fetch occupancy mid-window, so coalescing across
         # them is unsound; flat shared reuse stays fast-eligible (its
         # lookups/inserts live entirely inside exact steps).
-        fast = stepper == "fast" and (self.controller is None
-                                      or self.controller.coalescible)             and not self.tiered
+        # A non-coalescible SchedulerSpec (chunked-interleave / non-FCFS
+        # admission, DESIGN.md section 17) bails identically: composed
+        # steps and per-insert re-sorting break the uniform-run
+        # precondition. The intra-gpu shape bails too — its two slices
+        # share one pool, so a coalesced decode window would hide page
+        # frees from the concurrently-stepping prefill slice.
+        fast = stepper == "fast" \
+            and (self.controller is None or self.controller.coalescible) \
+            and not self.tiered \
+            and (self.spec.scheduler is None
+                 or self.spec.scheduler.coalescible) \
+            and not self.spec.is_intra
         self._warm_stores(requests)
         self.submit(requests)
         if self.controller is not None and self.controller.wants_ticks:
@@ -827,28 +913,34 @@ class FleetCluster:
         # honest attribution that lets scale-to-zero attack the floor.
         trace = self.meter.trace
         for e in self.engines:
+            # power comes from the ENGINE's cost model: for every fleet
+            # shape but intra-gpu that is self.cost (the same object —
+            # bit-identical accounting); an intra slice pays its
+            # SM-fraction share of the static floor, so the two slices
+            # of one accelerator sum to exactly one accelerator's idle
+            # draw (the honest denominator for the energy verdicts)
             segs = self._power_segments(e, t_start, t_end)
             if segs is None:
                 idle_s = max(makespan - e.busy_s, 0.0)
-                self.meter.add_power(e.name, self.cost.idle_power_w(),
+                self.meter.add_power(e.name, e.cost.idle_power_w(),
                                      idle_s, stage="idle")
                 if trace is not None:
                     trace.fill_idle(e.name, t_start, t_end,
-                                    self.cost.idle_power_w())
+                                    e.cost.idle_power_w())
                 continue
             for s0, s1, state in segs:
                 if state == "on":
                     filled = trace.fill_idle(e.name, s0, s1,
-                                             self.cost.idle_power_w())
+                                             e.cost.idle_power_w())
                     self.meter.add(e.name,
-                                   self.cost.idle_power_w() * filled,
+                                   e.cost.idle_power_w() * filled,
                                    stage="idle")
                 elif state == "wake":
-                    self.meter.add_power(e.name, self.cost.idle_power_w(),
+                    self.meter.add_power(e.name, e.cost.idle_power_w(),
                                          s1 - s0, stage="wake", t0=s0,
                                          state=IDLE)
                 elif state == "sleep":
-                    self.meter.add_power(e.name, self.cost.sleep_power_w(),
+                    self.meter.add_power(e.name, e.cost.sleep_power_w(),
                                          s1 - s0, stage="sleep", t0=s0,
                                          state=SLEEP)
                 else:   # absent: 0 W, explicit interval (never idle-filled)

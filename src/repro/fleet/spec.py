@@ -11,7 +11,15 @@ determines the fleet:
   * ``n_prefill`` x ``n_decode`` disaggregated instances with a KV
     ``medium`` (ici / host / disk), every (prefill, decode) pair getting
     its own ``TransferPath``; or ``n_colocated`` instances with no
-    transfer at all.
+    transfer at all; or ``n_intra`` intra-GPU-disaggregated accelerators
+    (RAPID-Serve): each accelerator SM-partitioned into a prefill slice
+    and a decode slice via ``CostModel.slice(intra_split)``, KV shared
+    in-place in one pool — a sixth shape *between* co and dis, with
+    per-slice phi/power but no transfer leg at all.
+  * ``scheduler`` (repro.sched): the per-step batch-composition and
+    admission policy of every engine. None = the legacy
+    serialize-prefill FCFS engine byte-for-byte (spec encodings omit
+    the key so every existing exp-cache hash is preserved).
   * per-instance DVFS settings: ``phi_prefill`` / ``phi_decode`` are a
     scalar (applied to every instance of the stage) or a tuple with one
     entry per instance — heterogeneous-frequency fleets fall out free.
@@ -31,6 +39,7 @@ from dataclasses import dataclass, replace
 from typing import Optional, Tuple, Union
 
 from repro.kvstore import ReuseSpec, as_reuse_spec
+from repro.sched import SchedulerSpec, as_scheduler_spec
 
 from .controller import ControllerSpec, as_controller_spec
 
@@ -98,6 +107,21 @@ class FleetSpec:
     # TieredKVStore (and makes the fast stepper bail to exact). Accepts
     # a mode string ("prefix"/"pic"), a kwargs dict, or a ReuseSpec.
     reuse: Optional[Union[str, dict, ReuseSpec]] = None
+    # per-step batch composition + admission order (repro.sched,
+    # DESIGN.md section 17): None = the legacy serialize-prefill FCFS
+    # engine byte-for-byte (spec encodings omit the key so every
+    # existing exp-cache hash is preserved). Accepts a composer or
+    # admission name ("chunked-interleave", "srpt", ...), a kwargs
+    # dict, or a SchedulerSpec. Non-coalescible schedulers make the
+    # fast stepper bail to exact.
+    scheduler: Optional[Union[str, dict, SchedulerSpec]] = None
+    # intra-GPU P/D disaggregation (the sixth setup): n_intra
+    # accelerators, each split into a prefill slice of ``intra_split``
+    # of the SMs/HBM-bandwidth/power rails and a decode slice of the
+    # rest. Mutually exclusive with both n_colocated and xP:yD; no
+    # medium (the KV pages never move — handoff is free and instant).
+    n_intra: int = 0
+    intra_split: float = 0.5
 
     # ------------------------------------------------------------------
     def __post_init__(self):
@@ -105,7 +129,27 @@ class FleetSpec:
                            _canon_phi(self.phi_prefill))
         object.__setattr__(self, "phi_decode",
                            _canon_phi(self.phi_decode))
-        if self.n_colocated:
+        object.__setattr__(self, "intra_split", float(self.intra_split))
+        if self.n_intra:
+            if self.n_prefill or self.n_decode or self.n_colocated:
+                raise ValueError(
+                    "a fleet is exactly one shape: got "
+                    f"n_intra={self.n_intra} with n_colocated="
+                    f"{self.n_colocated} / "
+                    f"{self.n_prefill}P:{self.n_decode}D")
+            if self.medium is not None:
+                raise ValueError(
+                    "intra-GPU fleets share KV in place: no medium")
+            if not 0.0 < self.intra_split < 1.0:
+                raise ValueError(
+                    "intra_split is the prefill slice's SM fraction: "
+                    f"need 0 < s < 1, got {self.intra_split}")
+            if self.controller is not None:
+                raise ValueError(
+                    "fleet controllers (autoscale / role-flip) do not "
+                    "apply to intra-GPU slices: the P/D split is a "
+                    "static SM partition of one accelerator")
+        elif self.n_colocated:
             if self.n_prefill or self.n_decode:
                 raise ValueError(
                     "a fleet is either colocated or disaggregated: got "
@@ -132,6 +176,9 @@ class FleetSpec:
                                as_controller_spec(self.controller))
         if self.reuse is not None:
             object.__setattr__(self, "reuse", as_reuse_spec(self.reuse))
+        if self.scheduler is not None:
+            object.__setattr__(self, "scheduler",
+                               as_scheduler_spec(self.scheduler))
         # broadcast now so a malformed tuple fails at spec construction
         self.phis_prefill
         self.phis_decode
@@ -143,23 +190,35 @@ class FleetSpec:
         return self.n_colocated > 0
 
     @property
+    def is_intra(self) -> bool:
+        """Intra-GPU P/D disaggregation: P and D slices of ONE
+        accelerator, KV shared in-place (no transfer leg)."""
+        return self.n_intra > 0
+
+    @property
     def is_disaggregated(self) -> bool:
-        return not self.is_colocated
+        """Cross-accelerator disaggregation (KV moves over a medium).
+        Intra-GPU fleets are *not* disaggregated in this sense: their
+        handoff never leaves HBM."""
+        return not self.is_colocated and not self.is_intra
 
     @property
     def num_engines(self) -> int:
+        if self.n_intra:
+            return 2 * self.n_intra    # one P slice + one D slice each
         return self.n_colocated or (self.n_prefill + self.n_decode)
 
     @property
     def phis_prefill(self) -> Tuple[float, ...]:
-        n = self.n_colocated or self.n_prefill
+        n = self.n_colocated or self.n_prefill or self.n_intra
         return _per_instance(self.phi_prefill, n, "phi_prefill")
 
     @property
     def phis_decode(self) -> Tuple[float, ...]:
         if self.is_colocated:
             return ()
-        return _per_instance(self.phi_decode, self.n_decode, "phi_decode")
+        n = self.n_decode or self.n_intra
+        return _per_instance(self.phi_decode, n, "phi_decode")
 
     @property
     def governors(self) -> Tuple[str, ...]:
@@ -178,7 +237,10 @@ class FleetSpec:
 
     @property
     def name(self) -> str:
-        """Sweep-row label, e.g. ``2P2D-ici`` or ``co-2``."""
+        """Sweep-row label, e.g. ``2P2D-ici``, ``co-2``, ``intra-gpu``."""
+        if self.is_intra:
+            return "intra-gpu" if self.n_intra == 1 \
+                else f"intra-{self.n_intra}"
         if self.is_colocated:
             return f"co-{self.n_colocated}"
         return f"{self.n_prefill}P{self.n_decode}D-{self.medium}"
@@ -215,6 +277,10 @@ class FleetSpec:
         labels round-trip through this)."""
         if name in SETUPS:
             return cls.from_setup(name, **kw)
+        if name == "intra-gpu":
+            return cls(n_intra=1, **kw)
+        if name.startswith("intra-") and name[6:].isdigit():
+            return cls(n_intra=int(name[6:]), **kw)
         if name.startswith("co-") and name[3:].isdigit():
             return cls.colocated(int(name[3:]), **kw)
         m = cls._NAME_RE.match(name)
@@ -223,7 +289,8 @@ class FleetSpec:
                                      m.group(3), **kw)
         raise ValueError(
             f"cannot parse fleet shape {name!r}: expected a setup name "
-            f"{SETUPS}, 'co-<n>', or '<x>P<y>D-<ici|host|disk>'")
+            f"{SETUPS}, 'co-<n>', 'intra-gpu'/'intra-<n>', or "
+            f"'<x>P<y>D-<ici|host|disk>'")
 
     # ------------------------------------------------------------------
     def with_phi(self, phi: Optional[float] = None,

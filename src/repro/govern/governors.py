@@ -164,8 +164,19 @@ class SLOSlackGovernor(Governor):
             backlog = sum(s.prefill_target - s.prefill_done
                           for s in engine.waiting + engine.prefilling)
             if backlog > 0:
-                stall = engine.cost.prefill_time_s(
-                    backlog, phi=phi, chunk=engine.budget)
+                sched = getattr(engine, "scheduler", None)
+                if sched is not None and sched.interleaves:
+                    # chunked-interleave composer (repro.sched): decode
+                    # shares EVERY step, so a running sequence stalls at
+                    # most one chunk-bounded composed step — not the
+                    # whole backlog drain. The governor sees scheduler
+                    # state and prices interference accordingly.
+                    stall = engine.cost.prefill_time_s(
+                        min(backlog, sched.chunk_tokens), phi=phi,
+                        chunk=sched.chunk_tokens)
+                else:
+                    stall = engine.cost.prefill_time_s(
+                        backlog, phi=phi, chunk=engine.budget)
         for s in batch:
             target = s.req.slo.tpot_s if s.req.slo is not None else None
             if not target:

@@ -9,8 +9,10 @@ Two modes:
     runs use an off-registry reduced config and live executors, so they
     simulate directly and are never cached.
 
-``--setup`` takes a legacy setup name or any fleet shape ("2P2D-ici",
-"co-3"; see repro.fleet.FleetSpec.parse).
+``--setup`` takes a legacy setup name, the intra-GPU P/D split
+("intra-gpu" / "intra-<k>": SM-sliced prefill+decode engines sharing
+one KV pool, repro.sched), or any fleet shape ("2P2D-ici", "co-3"; see
+repro.fleet.FleetSpec.parse).
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama32-3b \
       --setup dis-ici --batch-size 16
@@ -81,8 +83,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama32-3b")
     ap.add_argument("--setup", default="dis-ici",
-                    help=f"one of {SETUPS} or a fleet shape like "
-                         f"'2P2D-ici' / 'co-3'")
+                    help=f"one of {SETUPS}, the intra-GPU P/D split "
+                         "'intra-gpu' (repro.sched), or a fleet shape "
+                         "like '2P2D-ici' / 'co-3' / 'intra-2'")
     ap.add_argument("--batch-size", type=int, default=16)
     ap.add_argument("--input-len", type=int, default=16_384)
     ap.add_argument("--output-len", type=int, default=256)

@@ -108,6 +108,11 @@ def attribute_ttft(req, target_s: float,
 
 
 _TPOT_TERM = {"decode": "decode", "prefill": "prefill-interference",
+              # a chunked-interleave composed step (repro.sched) makes
+              # token progress for every running sequence, so its span
+              # is productive decode time, not interference — this is
+              # what lets fig11 measure the blame-share shrink
+              "mixed": "decode",
               "transfer-fetch": "fetch-interference",
               "tier-fetch": "fetch-interference"}
 

@@ -146,6 +146,26 @@ GRID = [
                                                "prefetch_pages": 2}}),
      dict(rate=8.0, n=14, lengths=RAGSharedPrefixLengths(prefix_len=1024),
           vocab_size=512, seed=13)),
+    # step schedulers (DESIGN.md section 17): non-coalescible composers
+    # and admission orders make the fast stepper bail to exact — parity
+    # must hold either way (that IS the bail rule's contract); the
+    # intra-gpu shape bails wholesale (shared-pool coalescing unsound)
+    (FleetSpec(n_colocated=1, scheduler={"composer": "chunked-interleave"}),
+     dict(rate=8.0, n=14, lengths=PaperFixedLengths(2048, 64), seed=14)),
+    (FleetSpec(n_colocated=2, scheduler={"admission": "srpt"}),
+     dict(rate=8.0, n=14, lengths=PaperFixedLengths(2048, 128), seed=15)),
+    (FleetSpec(n_prefill=1, n_decode=1, medium="ici",
+               scheduler={"composer": "chunked-interleave",
+                          "admission": "sjf", "chunk_tokens": 512}),
+     dict(rate=4.0, n=12, lengths=PaperFixedLengths(4096, 32),
+          slo=DEFAULT_INTERACTIVE_SLO, seed=16)),
+    (FleetSpec(n_intra=1),
+     dict(rate=2.0, n=10, lengths=PaperFixedLengths(2048, 64), seed=17)),
+    (FleetSpec(n_intra=1, intra_split=0.3,
+               scheduler={"composer": "chunked-interleave",
+                          "admission": "srpt"}),
+     dict(rate=2.0, n=10, lengths=PaperFixedLengths(1024, 128),
+          slo=DEFAULT_INTERACTIVE_SLO, seed=18)),
 ]
 
 
@@ -180,29 +200,44 @@ REUSES = (None, "prefix", {"mode": "pic"},
                                        "disk_pages": 32}},
           {"mode": "pic", "tiers": {"hbm_pages": 8, "dram_pages": 16,
                                     "prefetch_pages": 2}})
+# the scheduler axis (DESIGN.md section 17): None keeps the legacy
+# serial/FCFS paths (fast-eligible); a bare admission swap stays on the
+# serial composer but bails; chunked composers bail wholesale
+SCHEDULERS = (None, {"admission": "srpt"}, {"admission": "sjf"},
+              {"composer": "chunked-interleave"},
+              {"composer": "chunked-interleave", "admission": "srpt",
+               "chunk_tokens": 512})
 
 N_EXAMPLES = int(os.environ.get("REPRO_PARITY_EXAMPLES", "20"))
 
 
 def _spec_strategy():
     colocated = st.builds(
-        lambda n, gov, ctl, r, reuse: FleetSpec(
+        lambda n, gov, ctl, r, reuse, sched: FleetSpec(
             n_colocated=n, governor=gov, controller=ctl, router=r,
-            reuse=reuse),
+            reuse=reuse, scheduler=sched),
         st.integers(1, 2), st.sampled_from(GOVERNORS),
         st.sampled_from(CONTROLLERS), st.sampled_from(ROUTERS),
-        st.sampled_from(REUSES))
+        st.sampled_from(REUSES), st.sampled_from(SCHEDULERS))
     disagg = st.builds(
-        lambda p, d, m, r, kr, gov, ctl, phi_p, phi_d, reuse: FleetSpec(
+        lambda p, d, m, r, kr, gov, ctl, phi_p, phi_d, reuse, sched:
+        FleetSpec(
             n_prefill=p, n_decode=d, medium=m, router=r, kv_router=kr,
             governor=gov, controller=ctl, phi_prefill=phi_p,
-            phi_decode=phi_d, reuse=reuse),
+            phi_decode=phi_d, reuse=reuse, scheduler=sched),
         st.integers(1, 3), st.integers(1, 3), st.sampled_from(MEDIA),
         st.sampled_from(ROUTERS), st.sampled_from(KV_ROUTERS),
         st.sampled_from(GOVERNORS), st.sampled_from(CONTROLLERS),
         st.sampled_from((0.6, 0.8, 1.0)), st.sampled_from((0.7, 1.0)),
-        st.sampled_from(REUSES))
-    return st.one_of(colocated, disagg)
+        st.sampled_from(REUSES), st.sampled_from(SCHEDULERS))
+    # the sixth setup: SM-partitioned P/D slices over one shared pool
+    # (never fast-eligible — parity pins the wholesale bail)
+    intra = st.builds(
+        lambda n, split, gov, sched: FleetSpec(
+            n_intra=n, intra_split=split, governor=gov, scheduler=sched),
+        st.integers(1, 2), st.sampled_from((0.3, 0.5, 0.7)),
+        st.sampled_from(GOVERNORS), st.sampled_from(SCHEDULERS))
+    return st.one_of(colocated, disagg, intra)
 
 
 def _workload_strategy():

@@ -1,0 +1,315 @@
+"""repro.sched: spec normalization, chunk conservation, stall-free
+decode, SRPT determinism, and the intra-gpu (sixth setup) shape.
+
+DESIGN.md section 17. The fast-stepper bail contract for schedulers is
+locked by ``test_fastpath_parity.py`` (SCHEDULERS axis + grid cases);
+this module owns the scheduler-level invariants themselves.
+"""
+import dataclasses
+
+import pytest
+
+from hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
+
+from repro.configs import get_config
+from repro.core.costs import CostModel
+from repro.core.orchestrator import make_cluster, run_setup
+from repro.exp.spec import encode_fleet
+from repro.fleet.spec import FleetSpec
+from repro.sched import (ADMISSIONS, COMPOSERS, SchedulerSpec,
+                         as_scheduler_spec)
+from repro.workload import (DEFAULT_INTERACTIVE_SLO, PaperFixedLengths,
+                            open_loop_workload)
+
+CFG = get_config("llama32-3b")
+CHUNKED = SchedulerSpec(composer="chunked-interleave")
+
+
+# ----------------------------------------------------------------------
+# spec normalization + validation
+# ----------------------------------------------------------------------
+def test_scheduler_spec_normalization():
+    assert as_scheduler_spec(None) is None
+    # a bare string names whichever axis it belongs to
+    assert as_scheduler_spec("srpt") == SchedulerSpec(admission="srpt")
+    assert as_scheduler_spec("chunked-interleave") == CHUNKED
+    assert as_scheduler_spec({"admission": "sjf", "chunk_tokens": 512}) \
+        == SchedulerSpec(admission="sjf", chunk_tokens=512)
+    s = SchedulerSpec(admission="srpt")
+    assert as_scheduler_spec(s) is s
+    assert hash(SchedulerSpec()) == hash(SchedulerSpec())
+
+
+def test_scheduler_spec_validation():
+    with pytest.raises(ValueError):
+        as_scheduler_spec("warp-speed")
+    with pytest.raises(ValueError):
+        SchedulerSpec(composer="bogus")
+    with pytest.raises(ValueError):
+        SchedulerSpec(admission="bogus")
+    with pytest.raises(ValueError):
+        SchedulerSpec(chunk_tokens=0)
+
+
+def test_scheduler_spec_properties():
+    assert SchedulerSpec().coalescible          # serial + fcfs: legacy
+    assert not SchedulerSpec(admission="srpt").coalescible
+    assert not CHUNKED.coalescible
+    assert CHUNKED.interleaves
+    assert not SchedulerSpec(admission="srpt").interleaves
+    assert "serial" in COMPOSERS and "fcfs" in ADMISSIONS
+
+
+def test_fleet_spec_scheduler_normalizes():
+    spec = FleetSpec(n_colocated=1, scheduler="srpt")
+    assert spec.scheduler == SchedulerSpec(admission="srpt")
+    spec = FleetSpec(n_colocated=1,
+                     scheduler={"composer": "chunked-interleave"})
+    assert spec.scheduler == CHUNKED
+
+
+def test_intra_spec_shape():
+    spec = FleetSpec(n_intra=1)
+    assert spec.is_intra and not spec.is_colocated \
+        and not spec.is_disaggregated
+    assert spec.num_engines == 2          # one prefill + one decode slice
+    assert spec.name == "intra-gpu"
+    assert FleetSpec.parse("intra-gpu") == spec
+    assert FleetSpec.parse("intra-2").n_intra == 2
+    with pytest.raises(ValueError):
+        FleetSpec(n_intra=1, n_colocated=1)
+    with pytest.raises(ValueError):
+        FleetSpec(n_intra=1, intra_split=1.0)
+    with pytest.raises(ValueError):
+        FleetSpec(n_intra=1, controller="adaptive")
+
+
+def test_legacy_hash_unchanged():
+    """scheduler=None / n_intra=0 must vanish from the cache-key
+    encoding, so every pre-scheduler spec hash survives this PR."""
+    enc = encode_fleet(FleetSpec(n_colocated=2))
+    assert "scheduler" not in enc
+    assert "n_intra" not in enc and "intra_split" not in enc
+    enc = encode_fleet(FleetSpec(n_colocated=2, scheduler="srpt"))
+    assert enc["scheduler"]["admission"] == "srpt"
+    assert "n_intra" in encode_fleet(FleetSpec(n_intra=1))
+
+
+# ----------------------------------------------------------------------
+# chunk conservation + stall-free decode
+# ----------------------------------------------------------------------
+def _run_chunked(rate=8.0, n=12, prefill=2048, out=64, seed=3,
+                 spec=None):
+    spec = spec or FleetSpec(n_colocated=1, scheduler=CHUNKED)
+    reqs = open_loop_workload(rate=rate, n=n,
+                              lengths=PaperFixedLengths(prefill, out),
+                              slo=DEFAULT_INTERACTIVE_SLO, seed=seed)
+    cluster = make_cluster(spec, CFG)
+    cluster.run(reqs)
+    return cluster, reqs
+
+
+def test_chunk_conservation():
+    """For every request that was never evicted, the engine's chunk log
+    partitions [0, prefill_len) exactly: contiguous, non-overlapping,
+    summing to the prompt."""
+    cluster, reqs = _run_chunked()
+    assert all(r.finish_s is not None for r in reqs)
+    log = {}
+    for e in cluster.engines:
+        for rid, c0, c1 in e.chunk_log:
+            assert c1 > c0 >= 0
+            log.setdefault(rid, []).append((c0, c1))
+    assert log, "chunked composer emitted no chunks"
+    for r in reqs:
+        if r.evictions:
+            continue                     # recompute restarts the ledger
+        chunks = sorted(log.get(r.req_id, []))
+        assert chunks, f"req {r.req_id} prefetched no chunks"
+        assert chunks[0][0] == 0
+        assert chunks[-1][1] == r.prompt_len
+        for (a0, a1), (b0, b1) in zip(chunks, chunks[1:]):
+            assert a1 == b0, f"req {r.req_id}: gap/overlap {a1}->{b0}"
+
+
+def test_chunk_budget_respected():
+    spec = FleetSpec(n_colocated=1,
+                     scheduler=SchedulerSpec(
+                         composer="chunked-interleave", chunk_tokens=512))
+    cluster, _ = _run_chunked(spec=spec)
+    for e in cluster.engines:
+        for _, c0, c1 in e.chunk_log:
+            assert c1 - c0 <= 512
+
+
+def test_stall_free_decode():
+    """The composed step bounds prefill-priority stalls: at a rate where
+    the serial composer blows the TPOT budget on this workload, the
+    chunked composer keeps median TPOT strictly lower and attains more
+    goodput. (The fig11 crossover-shift claim, at unit-test scale.)"""
+    wk = dict(rate=6.0, n=14, prefill=8192, out=64, seed=1)
+    serial = FleetSpec(n_colocated=1)
+    chunked = FleetSpec(n_colocated=1, scheduler=CHUNKED)
+    out = {}
+    for name, spec in (("serial", serial), ("chunked", chunked)):
+        reqs = open_loop_workload(
+            rate=wk["rate"], n=wk["n"],
+            lengths=PaperFixedLengths(wk["prefill"], wk["out"]),
+            slo=DEFAULT_INTERACTIVE_SLO, seed=wk["seed"])
+        res = run_setup(spec, CFG, reqs)
+        out[name] = res.metrics
+    assert out["chunked"].median_tpot_s < out["serial"].median_tpot_s
+    assert out["chunked"].goodput_rps >= out["serial"].goodput_rps
+
+
+# ----------------------------------------------------------------------
+# admission orders
+# ----------------------------------------------------------------------
+def _finish_order(spec, seed=0):
+    reqs = open_loop_workload(rate=16.0, n=12,
+                              lengths=PaperFixedLengths(2048, 64),
+                              seed=seed)
+    run_setup(spec, CFG, reqs)
+    assert all(r.finish_s is not None for r in reqs)
+    return [r.req_id for r in
+            sorted(reqs, key=lambda r: (r.finish_s, r.req_id))]
+
+
+def test_srpt_deterministic():
+    spec = FleetSpec(n_colocated=1, scheduler="srpt")
+    assert _finish_order(spec) == _finish_order(spec)
+
+
+def test_admission_reorders_fcfs():
+    """On a simultaneous bimodal wave, FCFS serves the long job first
+    (lowest req_id); SJF/SRPT jump every short job ahead of it. The
+    first-token order is the observable."""
+    from repro.core.request import Request
+
+    def wave():
+        return [Request(req_id=0, prompt_len=8192, output_len=8,
+                        arrival_s=0.0)] + \
+               [Request(req_id=i, prompt_len=256, output_len=8,
+                        arrival_s=0.0) for i in range(1, 6)]
+
+    for admission, long_first in (("fcfs", True), ("sjf", False),
+                                  ("srpt", False)):
+        reqs = wave()
+        spec = FleetSpec(n_colocated=1, scheduler=admission)
+        run_setup(spec, CFG, reqs)
+        assert all(r.first_token_s is not None for r in reqs)
+        long_ft = reqs[0].first_token_s
+        shorts_ft = [r.first_token_s for r in reqs[1:]]
+        if long_first:
+            assert long_ft < min(shorts_ft), admission
+        else:
+            assert long_ft > max(shorts_ft), admission
+
+
+def test_admission_key_tiebreak_total_order():
+    spec = SchedulerSpec(admission="sjf")
+
+    class _Seq:
+        def __init__(self, rid, p, o):
+            self.req = type("R", (), {"req_id": rid, "prompt_len": p,
+                                      "output_len": o,
+                                      "generated": 0})()
+            self.prefill_target = p
+            self.prefill_done = 0
+
+    a = spec.admission_key(_Seq(1, 512, 64), None)
+    b = spec.admission_key(_Seq(2, 512, 64), None)
+    assert a < b                         # equal work: req_id breaks tie
+    assert spec.admission_key(_Seq(3, 256, 64), None) < a
+
+
+# ----------------------------------------------------------------------
+# intra-gpu: the sixth setup
+# ----------------------------------------------------------------------
+def test_cost_model_slice_partitions():
+    cm = CostModel(CFG)
+    lo, hi = cm.slice(0.4), cm.slice(0.6)
+    assert lo.acc.chip.peak_flops + hi.acc.chip.peak_flops \
+        == pytest.approx(cm.acc.chip.peak_flops)
+    assert lo.acc.chip.p_static_w + hi.acc.chip.p_static_w \
+        == pytest.approx(cm.acc.chip.p_static_w)
+    # the pool geometry is config-derived, NOT scaled: slices share HBM
+    assert lo.kv_bytes_per_token == cm.kv_bytes_per_token
+    with pytest.raises(ValueError):
+        cm.slice(0.0)
+    with pytest.raises(ValueError):
+        cm.slice(1.5)
+
+
+def test_intra_cluster_runs_with_zero_transfer():
+    spec = FleetSpec(n_intra=1)
+    reqs = open_loop_workload(rate=2.0, n=8,
+                              lengths=PaperFixedLengths(2048, 64),
+                              slo=DEFAULT_INTERACTIVE_SLO, seed=0)
+    cluster = make_cluster(spec, CFG)
+    cluster.run(reqs)
+    assert all(r.finish_s is not None for r in reqs)
+    # P and D slices of one accelerator share one physical KV pool
+    ep, ed = cluster.engines
+    assert ep.pool is ed.pool
+    assert ep.role == "prefill" and ed.role == "decode"
+    # the handoff is a pointer swap: no transfer stage is ever metered
+    stages = cluster.meter.by_stage
+    assert stages.get("transfer-store", 0.0) == 0.0
+    assert stages.get("transfer-fetch", 0.0) == 0.0
+    # both slices burn energy under their own (partial) power model
+    assert cluster.meter.joules[ep.name] > 0
+    assert cluster.meter.joules[ed.name] > 0
+
+
+def test_intra_not_in_legacy_setups():
+    """The paper's five-setup sweeps (goldens, full_sweep) must not
+    silently grow a sixth member."""
+    from repro.core import SETUPS
+    assert "intra-gpu" not in SETUPS and len(SETUPS) == 5
+
+
+# ----------------------------------------------------------------------
+# hypothesis invariants
+# ----------------------------------------------------------------------
+if HAS_HYPOTHESIS:
+    from hypothesis import HealthCheck
+
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(chunk=st.sampled_from((256, 512, 1024, 4096)),
+           rate=st.sampled_from((4.0, 8.0, 16.0)),
+           seed=st.integers(0, 2 ** 10),
+           prefill=st.sampled_from((512, 2048, 8192)))
+    def test_chunk_conservation_fuzz(chunk, rate, seed, prefill):
+        spec = FleetSpec(n_colocated=1,
+                         scheduler=SchedulerSpec(
+                             composer="chunked-interleave",
+                             chunk_tokens=chunk))
+        cluster, reqs = _run_chunked(rate=rate, n=10, prefill=prefill,
+                                     out=32, seed=seed, spec=spec)
+        log = {}
+        for e in cluster.engines:
+            for rid, c0, c1 in e.chunk_log:
+                assert 0 < c1 - c0 <= chunk
+                log.setdefault(rid, []).append((c0, c1))
+        for r in reqs:
+            if r.evictions:
+                continue
+            chunks = sorted(log.get(r.req_id, []))
+            covered = sum(c1 - c0 for c0, c1 in chunks)
+            assert covered == r.prompt_len, r.req_id
+            for (_, a1), (b0, _) in zip(chunks, chunks[1:]):
+                assert a1 == b0
+
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(admission=st.sampled_from(("sjf", "srpt", "prefix-aware")),
+           seed=st.integers(0, 2 ** 10))
+    def test_admission_deterministic_fuzz(admission, seed):
+        spec = FleetSpec(n_colocated=2, scheduler=admission)
+        assert _finish_order(spec, seed) == _finish_order(spec, seed)
+else:  # pragma: no cover - container without the dev extra
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_sched_fuzz():
+        pass
